@@ -1,0 +1,42 @@
+"""Paper Figs. 15/16: Betweenness Centrality, TEPS metric.
+
+Uses the complemented-mask forward sweep (MSA; MCA unsupported per paper
+§8.4) with a source batch, like the paper's batch=512 (scaled down)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.formats import erdos_renyi, rmat
+from repro.graphs.betweenness import betweenness_centrality, bc_teps
+from .common import save
+
+ALGOS = ("msa", "heap")
+
+
+def run(batch: int = 32):
+    graphs = {
+        "er_512_d8": erdos_renyi(512, 8, seed=1),
+        "rmat_9_e8": rmat(9, 8, seed=2),
+        "rmat_10_e4": rmat(10, 4, seed=3),
+    }
+    out = {}
+    for gname, g in graphs.items():
+        rng = np.random.default_rng(0)
+        srcs = rng.choice(g.shape[0], size=min(batch, g.shape[0]),
+                          replace=False)
+        row = {}
+        for algo in ALGOS:
+            bc, secs, calls = betweenness_centrality(g, sources=srcs,
+                                                     algorithm=algo)
+            row[algo] = {"seconds": secs, "calls": calls,
+                         "mteps": bc_teps(g, secs, len(srcs)) / 1e6}
+            print(f"[bc] {gname:12s} {algo:5s} spgemm={secs*1e3:.0f}ms "
+                  f"calls={calls} MTEPS={row[algo]['mteps']:.2f}",
+                  flush=True)
+        out[gname] = row
+    save("betweenness", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Figs. 12-14: k-truss (k=5), GFLOPS = summed masked-SpGEMM flops /
+summed masked-SpGEMM time, iterating as the graph prunes."""
+from __future__ import annotations
+
+from repro.graphs.ktruss import ktruss
+from .common import graph_suite, perf_profile, save
+
+ALGOS = ("msa", "hash", "mca", "inner")
+
+
+def run(small: bool = True, k: int = 5):
+    suite = graph_suite(small)
+    times = {}
+    for gname, g in suite.items():
+        row = {}
+        sizes = {}
+        for algo in ALGOS:
+            for phase in ("1p", "2p"):
+                truss, secs, iters, flops = ktruss(
+                    g, k, algorithm=algo, two_phase=phase == "2p")
+                row[f"{algo}-{phase}"] = secs
+                sizes.setdefault("edges", truss.nnz)
+                assert sizes["edges"] == truss.nnz
+                if phase == "1p":
+                    print(f"[ktruss] {gname:12s} {algo:5s} iters={iters} "
+                          f"gflops={flops / max(secs, 1e-9) / 1e9:.3f}",
+                          flush=True)
+        times[gname] = row
+    payload = {"times": times, "profile": perf_profile(times)}
+    save("ktruss", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Fig. 10: Triangle-Counting GFLOPS vs R-MAT scale."""
+from __future__ import annotations
+
+from repro.core.formats import rmat
+from repro.graphs.triangle_counting import triangle_count, tc_flops
+from .common import save, timeit
+
+ALGOS = ("msa", "hash", "mca", "inner")
+
+
+def run(scales=(8, 9, 10, 11), edge_factor: int = 8, iters: int = 2):
+    out = {}
+    for scale in scales:
+        g = rmat(scale, edge_factor, seed=scale)
+        flops = tc_flops(g)
+        row = {}
+        for algo in ALGOS:
+            def go():
+                triangle_count(g, algorithm=algo)
+            t = timeit(go, warmup=0, iters=iters)
+            row[algo] = {"seconds": t, "gflops": flops / t / 1e9}
+        out[f"scale{scale}"] = {"nnz": g.nnz, "flops": flops, **row}
+        print(f"[rmat] scale={scale} nnz={g.nnz:9d} " +
+              " ".join(f"{a}={row[a]['gflops']:.3f}GF" for a in ALGOS),
+              flush=True)
+    save("rmat_scale", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Fig. 11: strong scaling.
+
+The paper scales OpenMP threads; the analogue here is devices: the
+row-parallel masked SpGEMM under shard_map on 1/2/4/8 forced host devices
+(subprocesses, because the device count locks at backend init).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+from .common import save
+
+_CHILD = r"""
+import os, sys, time, json
+n = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+import jax, numpy as np
+from repro.core.formats import erdos_renyi, padded_from_csr, random_mask_like
+from repro.core.distributed import row_parallel_masked_spgemm, pad_rows_to
+
+g = erdos_renyi(4096, 16, seed=1)
+m = random_mask_like(g, 0.5, seed=2)
+A = padded_from_csr(g); B = padded_from_csr(g); M = padded_from_csr(m)
+mesh = jax.make_mesh((n,), ("data",))
+A, M = pad_rows_to(n, A, M)
+def go():
+    vals, present = row_parallel_masked_spgemm(A, B, M, mesh,
+                                               algorithm="msa")
+    vals.block_until_ready()
+go()
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter(); go(); ts.append(time.perf_counter() - t0)
+print(json.dumps({"n": n, "seconds": float(np.median(ts))}))
+"""
+
+
+def run(device_counts=(1, 2, 4, 8)):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    out = {}
+    for n in device_counts:
+        r = subprocess.run([sys.executable, "-c", _CHILD, str(n)],
+                           capture_output=True, text=True, timeout=600,
+                           env=env)
+        if r.returncode != 0:
+            out[str(n)] = {"error": r.stderr[-500:]}
+            continue
+        d = json.loads(r.stdout.strip().splitlines()[-1])
+        out[str(n)] = d
+        base = out.get("1", d)["seconds"]
+        print(f"[scaling] devices={n} t={d['seconds']*1e3:.1f}ms "
+              f"speedup={base / d['seconds']:.2f}x", flush=True)
+    save("strong_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark utilities: timing, graph suite, result IO."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn() (fn must block until ready)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def graph_suite(small: bool = True) -> Dict[str, "CSR"]:
+    """Stand-in for the paper's 26 SuiteSparse graphs (offline container):
+    ER + R-MAT graphs spanning the same density regimes."""
+    from repro.core.formats import erdos_renyi, rmat
+    if small:
+        return {
+            "er_1k_d4": erdos_renyi(1024, 4, seed=1),
+            "er_1k_d16": erdos_renyi(1024, 16, seed=2),
+            "er_4k_d8": erdos_renyi(4096, 8, seed=3),
+            "rmat_9_e8": rmat(9, 8, seed=4),
+            "rmat_10_e8": rmat(10, 8, seed=5),
+            "rmat_11_e4": rmat(11, 4, seed=6),
+        }
+    return {
+        **graph_suite(True),
+        "rmat_12_e8": rmat(12, 8, seed=7),
+        "rmat_13_e8": rmat(13, 8, seed=8),
+        "er_16k_d16": erdos_renyi(16384, 16, seed=9),
+    }
+
+
+def perf_profile(times: Dict[str, Dict[str, float]]) -> Dict[str, List]:
+    """Dolan-More performance profile: for each algo, sorted ratios to the
+    per-instance best (the paper's Figs. 8/9/12/13/16)."""
+    algos = sorted({a for row in times.values() for a in row})
+    prof = {}
+    for a in algos:
+        ratios = []
+        for inst, row in times.items():
+            if a not in row:
+                continue
+            best = min(row.values())
+            ratios.append(row[a] / best)
+        prof[a] = sorted(ratios)
+    return prof

@@ -1,0 +1,155 @@
+"""§Roofline: three-term analysis per (arch x shape) from the dry-run.
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU, v5e)
+    memory     = HLO_bytes_per_device / 819e9         (HBM)
+    collective = collective_bytes_per_device / 50e9   (ICI per link)
+
+Sources: the dry-run emits two lowerings per cell — the scan form (real
+compile + memory_analysis) and the REPRO_UNROLL form (exact per-device
+flops/bytes/collective counts; XLA's HloCostAnalysis visits while bodies
+once, so the rolled numbers undercount by the layer count).  MODEL_FLOPS
+(6·N·D forward-backward, or 2·N·D decode) comes from an analytic param
+count; the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled compute
+is "useful".
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+def param_count(arch: str) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token for MoE)."""
+    from repro.configs.base import get_config
+    import jax
+    from repro.models import transformer as T
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        mo = cfg.moe
+        n_moe_layers = cfg.n_layers - cfg.first_k_dense
+        per_expert = 3 * cfg.d_model * mo.d_ff_expert
+        inactive = n_moe_layers * (mo.n_experts - mo.top_k) * per_expert
+        active = total - inactive
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·D for train; 2·N_active per token for decode/prefill fwd."""
+    from repro.configs.base import SHAPES
+    p = param_count(arch)["active"]
+    sh = SHAPES[shape_name]
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * p * tokens
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * p * tokens
+    return 2.0 * p * sh.global_batch          # decode: one token/sequence
+
+
+def analyze_cell(base: dict, unrolled: Optional[dict]) -> dict:
+    n_dev = base.get("n_devices", 256)
+    src = unrolled if (unrolled and unrolled.get("status") == "ok") else base
+    acct_kind = (unrolled or {}).get("accounting", "unrolled") \
+        if src is not base else "rolled(UNDERCOUNTS scanned layers)"
+    flops_dev = src.get("cost_analysis", {}).get("flops", float("nan"))
+    bytes_dev = src.get("cost_analysis", {}).get("bytes accessed",
+                                                 float("nan"))
+    coll = src.get("collective_bytes_per_device", {})
+    coll_dev = float(sum(v for v in coll.values()
+                         if isinstance(v, (int, float))))
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=lambda k: (terms[k]
+                                    if terms[k] == terms[k] else -1))
+    mf = model_flops(base["arch"], base["shape"])
+    mf_dev = mf / n_dev
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": base["arch"], "shape": base["shape"], "mesh": base["mesh"],
+        "status": base["status"],
+        "accounting": acct_kind,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dom,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "model_flops_per_device": mf_dev,
+        "model_over_hlo_flops": (mf_dev / flops_dev
+                                 if flops_dev else float("nan")),
+        "roofline_fraction": ((mf_dev / PEAK_FLOPS) / bound
+                              if bound and bound == bound else float("nan")),
+        "memory_temp_gb": (base.get("memory_analysis", {})
+                           .get("temp_size_in_bytes") or 0) / 1e9,
+        "fits_16g": ((base.get("memory_analysis", {})
+                      .get("temp_size_in_bytes") or 0)
+                     + (base.get("memory_analysis", {})
+                        .get("argument_size_in_bytes") or 0)) < 16e9,
+    }
+
+
+def load(outdir: str, arch: str, shape: str, mesh: str, tag: str = ""):
+    suffix = f".{tag}" if tag else ""
+    path = os.path.join(outdir, f"{arch}.{shape}.{mesh}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(outdir: str = "results/dryrun", mesh: str = "pod",
+        save_to: str = "results/bench/roofline.json"):
+    from repro.configs.base import ARCH_IDS, SHAPES
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            base = load(outdir, arch, shape, mesh)
+            if base is None:
+                continue
+            if base.get("status") == "skipped":
+                rows.append({"arch": arch, "shape": shape,
+                             "mesh": base["mesh"], "status": "skipped",
+                             "reason": base.get("reason", "")})
+                continue
+            acct = load(outdir, arch, shape, mesh, tag="acct") or \
+                load(outdir, arch, shape, mesh, tag="unroll")
+            rows.append(analyze_cell(base, acct))
+    os.makedirs(os.path.dirname(save_to), exist_ok=True)
+    with open(save_to, "w") as f:
+        json.dump(rows, f, indent=2)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dominant':>12s} {'MF/HLO':>7s} {'RLfrac':>7s}")
+    print(hdr)
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:24s} {r['shape']:12s} -- skipped: "
+                  f"{r.get('reason', '')[:40]}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant']:>12s} "
+              f"{r['model_over_hlo_flops']:7.3f} "
+              f"{r['roofline_fraction']:7.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    run(args.outdir, args.mesh)

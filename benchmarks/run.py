@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one module per paper figure + the tile-path bench.
+
+  PYTHONPATH=src python -m benchmarks.run            # small CPU sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # larger suite
+  PYTHONPATH=src python -m benchmarks.run --only density,triangle
+
+Roofline (needs results/dryrun from repro.launch.dryrun):
+  PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+ORDER = ("density", "triangle", "rmat", "scaling", "ktruss", "bc", "block")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(ORDER)
+
+    from . import (bench_bc, bench_block_kernel, bench_density,
+                   bench_ktruss, bench_rmat_scale, bench_scaling,
+                   bench_triangle)
+    jobs = {
+        "density": lambda: bench_density.run(
+            n=2048 if args.full else 1024),
+        "triangle": lambda: bench_triangle.run(small=not args.full),
+        "rmat": lambda: bench_rmat_scale.run(
+            scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),
+        "scaling": lambda: bench_scaling.run(),
+        "ktruss": lambda: bench_ktruss.run(small=not args.full),
+        "bc": lambda: bench_bc.run(batch=64 if args.full else 16),
+        "block": lambda: bench_block_kernel.run(),
+    }
+    failures = []
+    for name in ORDER:
+        if name not in only:
+            continue
+        print(f"\n===== bench: {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            jobs[name]()
+            print(f"===== {name} done in {time.time() - t0:.1f}s =====",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks completed; results in results/bench/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny     # smoke (~1 min)
+
+The model is the llama3.2 family scaled to ~100M params, trained on the
+deterministic synthetic stream (Zipf + induction-copy segments).  Loss
+must fall well below the unigram entropy as the model learns to copy —
+that drop is asserted at the end.  Checkpoints publish atomically; rerun
+the same command after killing it and it resumes from LATEST.
+"""
+import argparse
+import os
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.tiny:
+        steps = args.steps or 30
+        losses, _ = run("llama3_2_1b", smoke=True, steps=steps, batch=4,
+                        seq=64, ckpt_dir=args.ckpt_dir, ckpt_every=10,
+                        lr=3e-3, log_every=5)
+    else:
+        # ~100M: 12 layers x d512 x ff2048, 32k vocab (llama3.2 family)
+        import repro.configs.llama3_2_1b as base
+        cfg100m = base.CONFIG.replace(
+            name="llama-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+            tie_embeddings=False, dtype="float32", remat="none",
+            attn_block=64)
+        import repro.configs.base as cb
+        # register on the fly so the launcher can find it
+        import sys
+        import types
+        mod = types.ModuleType("repro.configs.llama_100m")
+        mod.CONFIG = cfg100m
+        mod.SMOKE = cfg100m
+        sys.modules["repro.configs.llama_100m"] = mod
+        steps = args.steps or 200
+        losses, _ = run("llama_100m", smoke=False, steps=steps, batch=4,
+                        seq=128, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                        lr=1e-3, log_every=10,
+                        max_seconds=float(os.environ.get(
+                            "TRAIN_LM_MAX_SECONDS", 0)) or 0.0)
+
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    print(f"\nloss: {first:.3f} -> {last:.3f}")
+    assert last < first - 0.5, "model failed to learn"
+    print("OK: model learned the synthetic stream")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .base import (ModelConfig, MoECfg, MLACfg, SSMCfg, XLSTMCfg, ShapeCfg,
+                   SHAPES, ARCH_IDS, ARCH_ALIASES, get_config,
+                   cell_is_runnable)

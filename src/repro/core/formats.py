@@ -1,0 +1,347 @@
+"""Sparse matrix storage formats.
+
+The paper (Milakovic et al., "Parallel Algorithms for Masked Sparse
+Matrix-Matrix Products", 2021) uses element-level CSR/CSC on CPUs.  JAX/TPU
+needs static shapes and tile-granular compute, so we provide three layers:
+
+  * ``CSR`` / ``CSC``          -- host-side (numpy) element formats, used to
+                                  build problems and as ground truth.
+  * ``PaddedCSR`` (ELL-like)   -- device-friendly element format: every row is
+                                  padded to a static width so the paper's
+                                  row-parallel algorithms can be ``vmap``-ed.
+  * ``BCSR`` / ``BCSC``        -- Block-CSR with MXU-aligned dense tiles; the
+                                  TPU-native adaptation of the paper's
+                                  algorithms operates on these.
+
+All element formats keep column indices sorted within each row (the paper
+assumes sorted inputs for MCA and Heap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# Host-side element CSR/CSC (numpy; problem setup + oracles)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CSR:
+    """Host-side CSR. indptr:(m+1,) indices:(nnz,) data:(nnz,) shape:(m,n)."""
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[i], self.indptr[i + 1]
+        return self.indices[s:e], self.data[s:e]
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        for i in range(self.shape[0]):
+            cols, vals = self.row(i)
+            out[i, cols] = vals
+        return out
+
+    def transpose(self) -> "CSR":
+        """CSR of the transpose (== CSC view of self)."""
+        return csr_from_coo(
+            self.indices,
+            _expand_rows(self.indptr),
+            self.data,
+            (self.shape[1], self.shape[0]),
+        )
+
+    def sorted_rows(self) -> "CSR":
+        indices = self.indices.copy()
+        data = self.data.copy()
+        for i in range(self.shape[0]):
+            s, e = self.indptr[i], self.indptr[i + 1]
+            order = np.argsort(indices[s:e], kind="stable")
+            indices[s:e] = indices[s:e][order]
+            data[s:e] = data[s:e][order]
+        return CSR(self.indptr, indices, data, self.shape)
+
+
+def _expand_rows(indptr: np.ndarray) -> np.ndarray:
+    """Row index of every nonzero, from indptr."""
+    counts = np.diff(indptr)
+    return np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+
+
+def csr_from_coo(rows, cols, vals, shape, sum_dups: bool = True) -> CSR:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if sum_dups and len(rows):
+        key = rows * shape[1] + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        new_vals = np.zeros(len(uniq), dtype=vals.dtype)
+        np.add.at(new_vals, inv, vals)
+        rows, cols, vals = uniq // shape[1], uniq % shape[1], new_vals
+    indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(indptr, cols.astype(np.int64), vals, shape)
+
+
+def csr_from_dense(a: np.ndarray) -> CSR:
+    rows, cols = np.nonzero(a)
+    return csr_from_coo(rows, cols, a[rows, cols], a.shape, sum_dups=False)
+
+
+# --------------------------------------------------------------------------
+# Device-side PaddedCSR (ELL): rows padded to a static width
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PaddedCSR:
+    """ELL-style padded rows: cols:(m, w) int32, vals:(m, w), lens:(m,) int32.
+
+    Padding columns hold ``ncols`` (an out-of-range sentinel that sorts after
+    every real column, which keeps merge-based algorithms branch-free).
+    """
+
+    cols: Array  # (m, w) int32, sorted ascending per row, pad = ncols
+    vals: Array  # (m, w)
+    lens: Array  # (m,) int32
+    shape: Tuple[int, int]  # static
+
+    def tree_flatten(self):
+        return (self.cols, self.vals, self.lens), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux)
+
+    @property
+    def width(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def valid(self) -> Array:
+        return self.cols < self.shape[1]
+
+    def to_dense(self) -> Array:
+        m, n = self.shape
+        out = jnp.zeros((m, n + 1), dtype=self.vals.dtype)
+        rows = jnp.broadcast_to(jnp.arange(m)[:, None], self.cols.shape)
+        out = out.at[rows, self.cols].add(jnp.where(self.valid(), self.vals, 0))
+        return out[:, :n]
+
+
+def padded_from_csr(a: CSR, width: Optional[int] = None, dtype=jnp.float32) -> PaddedCSR:
+    a = a.sorted_rows()
+    m, n = a.shape
+    row_nnz = a.row_nnz()
+    w = int(width if width is not None else max(1, int(row_nnz.max(initial=0))))
+    cols = np.full((m, w), n, dtype=np.int32)
+    vals = np.zeros((m, w), dtype=np.float32)
+    for i in range(m):
+        c, v = a.row(i)
+        k = min(len(c), w)
+        cols[i, :k] = c[:k]
+        vals[i, :k] = v[:k]
+    return PaddedCSR(
+        jnp.asarray(cols), jnp.asarray(vals, dtype=dtype),
+        jnp.asarray(np.minimum(row_nnz, w), dtype=jnp.int32), (m, n)
+    )
+
+
+def padded_from_dense(a: np.ndarray, width: Optional[int] = None) -> PaddedCSR:
+    return padded_from_csr(csr_from_dense(np.asarray(a)), width)
+
+
+# --------------------------------------------------------------------------
+# Block-CSR: the TPU-native format.  Tiles are dense (bs x bs) blocks.
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BCSR:
+    """Block-CSR: indptr:(Mb+1,), indices:(nnzb,), blocks:(nnzb, bs, bs).
+
+    ``indptr``/``indices`` live on host (numpy) because they drive schedule
+    construction (the symbolic phase); ``blocks`` is a device array.
+    """
+
+    indptr: np.ndarray  # host
+    indices: np.ndarray  # host, sorted per block-row
+    blocks: Array  # (nnzb, bs, bs) device
+    shape: Tuple[int, int]  # element shape
+    block_size: int
+
+    def tree_flatten(self):
+        return (self.blocks,), (self.indptr.tobytes(), self.indices.tobytes(),
+                                len(self.indptr), len(self.indices),
+                                self.shape, self.block_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        pb, ib, np_len, ni_len, shape, bs = aux
+        indptr = np.frombuffer(pb, dtype=np.int64, count=np_len)
+        indices = np.frombuffer(ib, dtype=np.int64, count=ni_len)
+        return cls(indptr, indices, children[0], shape, bs)
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def block_rows(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def block_cols(self) -> int:
+        return -(-self.shape[1] // self.block_size)
+
+    def block_row(self, i: int) -> np.ndarray:
+        return self.indices[self.indptr[i]: self.indptr[i + 1]]
+
+    def to_dense(self) -> np.ndarray:
+        bs = self.block_size
+        mb, nb = self.block_rows, self.block_cols
+        out = np.zeros((mb * bs, nb * bs), dtype=np.asarray(self.blocks).dtype)
+        blocks = np.asarray(self.blocks)
+        for i in range(mb):
+            for p in range(self.indptr[i], self.indptr[i + 1]):
+                j = self.indices[p]
+                out[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = blocks[p]
+        return out[: self.shape[0], : self.shape[1]]
+
+
+def bcsr_from_dense(a: np.ndarray, block_size: int, prune_zero: bool = True) -> BCSR:
+    a = np.asarray(a)
+    m, n = a.shape
+    bs = block_size
+    mb, nb = -(-m // bs), -(-n // bs)
+    padded = np.zeros((mb * bs, nb * bs), dtype=a.dtype)
+    padded[:m, :n] = a
+    tiles = padded.reshape(mb, bs, nb, bs).transpose(0, 2, 1, 3)
+    nz = np.abs(tiles).sum(axis=(2, 3)) != 0 if prune_zero else np.ones((mb, nb), bool)
+    rows, cols = np.nonzero(nz)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    indptr = np.zeros(mb + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    blocks = tiles[rows, cols] if len(rows) else np.zeros((0, bs, bs), a.dtype)
+    return BCSR(indptr, cols.astype(np.int64), jnp.asarray(blocks), (m, n), bs)
+
+
+def bcsr_structure_transpose(a: BCSR) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Column-major view of the block structure: (indptr_T, rows_T, pos_T).
+
+    ``pos_T[p]`` is the position in ``a.blocks`` of the p-th block when
+    traversing column-by-column.  Used to build pull-based schedules.
+    """
+    mb = a.block_rows
+    nb = a.block_cols
+    rows = np.repeat(np.arange(mb, dtype=np.int64), np.diff(a.indptr))
+    cols = a.indices
+    pos = np.arange(a.nnzb, dtype=np.int64)
+    order = np.lexsort((rows, cols))
+    rows_t, cols_t, pos_t = rows[order], cols[order], pos[order]
+    indptr_t = np.zeros(nb + 1, dtype=np.int64)
+    np.add.at(indptr_t, cols_t + 1, 1)
+    return np.cumsum(indptr_t), rows_t, pos_t
+
+
+# --------------------------------------------------------------------------
+# Random sparse generators (paper Sec. 7: Erdos-Renyi and R-MAT/Graph500)
+# --------------------------------------------------------------------------
+
+
+def erdos_renyi(n: int, avg_degree: float, seed: int = 0,
+                values: str = "uniform") -> CSR:
+    """ER(n, d): each row has ~Poisson(d) nonzeros at uniform columns."""
+    rng = np.random.default_rng(seed)
+    nnz = rng.poisson(avg_degree, size=n)
+    rows = np.repeat(np.arange(n, dtype=np.int64), nnz)
+    cols = rng.integers(0, n, size=int(nnz.sum()), dtype=np.int64)
+    if values == "ones":
+        vals = np.ones(len(rows), dtype=np.float32)
+    else:
+        vals = rng.uniform(0.5, 1.5, size=len(rows)).astype(np.float32)
+    return csr_from_coo(rows, cols, vals, (n, n))
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19,
+         symmetric: bool = True, remove_self_loops: bool = True) -> CSR:
+    """R-MAT generator with Graph500 parameters (a,b,c,d)=(.57,.19,.19,.05)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    rows = np.zeros(m, dtype=np.int64)
+    cols = np.zeros(m, dtype=np.int64)
+    for lvl in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities with noise, Graph500-style
+        ab = a + b
+        abc = a + b + c
+        go_right = ((r >= a) & (r < ab)) | (r >= abc)
+        go_down = r >= ab
+        rows |= go_down.astype(np.int64) << lvl
+        cols |= go_right.astype(np.int64) << lvl
+    if remove_self_loops:
+        keep = rows != cols
+        rows, cols = rows[keep], cols[keep]
+    if symmetric:
+        rows, cols = np.concatenate([rows, cols]), np.concatenate([cols, rows])
+    vals = np.ones(len(rows), dtype=np.float32)
+    out = csr_from_coo(rows, cols, vals, (n, n))
+    out.data[:] = 1.0  # binarize: duplicate edges must not create weights
+    return out
+
+
+def random_mask_like(a: CSR, keep_prob: float, seed: int = 0) -> CSR:
+    """Random subsample of a's pattern (mask values are irrelevant)."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random(a.nnz) < keep_prob
+    rows = _expand_rows(a.indptr)[keep]
+    return csr_from_coo(rows, a.indices[keep], np.ones(keep.sum(), np.float32),
+                        a.shape, sum_dups=False)
+
+
+def tril(a: CSR, strict: bool = True) -> CSR:
+    rows = _expand_rows(a.indptr)
+    keep = a.indices < rows if strict else a.indices <= rows
+    return csr_from_coo(rows[keep], a.indices[keep], a.data[keep], a.shape,
+                        sum_dups=False)

@@ -1,0 +1,56 @@
+"""GraphBLAS-style semirings for masked sparse products.
+
+The paper's algorithms are defined over an arbitrary semiring (Sec. 2); the
+graph apps use PLUS_TIMES (triangle counting / k-truss support counts) and
+PLUS_FIRST / boolean semirings (BFS-like traversals in betweenness
+centrality).  A semiring is (add, mul, zero); ``add`` must be associative and
+commutative with identity ``zero``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    add: Callable
+    mul: Callable
+    zero: float
+
+    def matmul(self, a, b):
+        """Dense *structural* matmul under this semiring: (m,k) x (k,n).
+
+        Entries equal to literal 0 in a/b are treated as structurally absent
+        (contributing the semiring zero, not mul(0, .)), matching sparse
+        semantics where only stored nonzeros generate products.
+        """
+        if self.name == "plus_times":
+            return a @ b
+        # generic (slow) path: broadcast over k, mask absent products
+        both = (a != 0)[:, :, None] & (b != 0)[None, :, :]
+        prod = jnp.where(both, self.mul(a[:, :, None], b[None, :, :]),
+                         self.zero)  # (m, k, n)
+        out = prod[:, 0, :]
+        k = prod.shape[1]
+        for i in range(1, k):
+            out = self.add(out, prod[:, i, :])
+        return out
+
+
+PLUS_TIMES = Semiring("plus_times", jnp.add, jnp.multiply, 0.0)
+# OR-AND over {0,1} floats
+OR_AND = Semiring("or_and", lambda x, y: jnp.maximum(x, y),
+                  lambda x, y: jnp.minimum(jnp.sign(jnp.abs(x)), jnp.sign(jnp.abs(y))), 0.0)
+# min-plus (tropical): zero is +inf
+MIN_PLUS = Semiring("min_plus", jnp.minimum, jnp.add, jnp.inf)
+# plus_first: mul(a, b) = a  (used for frontier expansion where B is pattern)
+PLUS_FIRST = Semiring("plus_first", jnp.add, lambda x, y: x, 0.0)
+# plus_second: mul(a, b) = b
+PLUS_SECOND = Semiring("plus_second", jnp.add, lambda x, y: y, 0.0)
+
+REGISTRY = {s.name: s for s in
+            (PLUS_TIMES, OR_AND, MIN_PLUS, PLUS_FIRST, PLUS_SECOND)}

@@ -1,0 +1,6 @@
+"""Graph applications from the paper's evaluation (§7-8): Triangle Counting,
+k-truss, and Betweenness Centrality, written against the Masked SpGEMM
+primitive exactly as a GraphBLAS user would."""
+from .triangle_counting import triangle_count
+from .ktruss import ktruss
+from .betweenness import betweenness_centrality

@@ -1,0 +1,154 @@
+"""Pull-based block-masked flash attention (Pallas TPU).
+
+This kernel IS the paper's pull algorithm (§4.1) at MXU-tile granularity:
+for each *allowed* output tile (q-block), stream the k-dimension tiles
+(KV blocks) that the mask admits, and never touch the rest.  The host-built
+worklist of (q_block, kv_block) pairs is the mask's block structure; the
+streaming softmax is the semiring-style accumulation.  Fully-masked tiles
+cost zero flops AND zero memory traffic — the central saving the paper
+measures (Fig. 1).
+
+Worklist layout: flat (P,) arrays qi, ki, flags — sorted by qi so the
+sequential TPU grid can keep one q-block's accumulator in VMEM.
+flags bit0 = first visit of qi (init accumulators), bit1 = last visit
+(normalize + flush).
+
+Scratch is (bq, LANES)/(bq, D) f32 in VMEM; running max m and normalizer l
+are replicated across the 128-lane minor dimension (Mosaic-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -1e30
+
+
+def _body(qi_ref, ki_ref, flags_ref, q_ref, k_ref, v_ref, o_ref,
+          m_ref, l_ref, acc_ref, *, bq, bk, scale, causal, window, prefix,
+          q_offset):
+    w = pl.program_id(0)
+    first = flags_ref[w] & 1
+    last = (flags_ref[w] >> 1) & 1
+
+    @pl.when(first == 1)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                     # (bq, d)
+    k = k_ref[0]                                     # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # parametric element mask inside the tile
+    qg = qi_ref[w] * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    kg = ki_ref[w] * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= kg <= qg
+    if window > 0:
+        ok &= ((qg - kg) < window) | (kg < prefix)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)       # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+    p = jnp.exp(s - m_new)                           # (bq, bk)
+    p = jnp.where(ok, p, 0.0)
+    l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(last == 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[...] = o.astype(o_ref.dtype)[None]
+
+
+def build_schedule(s_q: int, s_k: int, *, bq: int, bk: int, causal: bool,
+                   window: int, prefix: int, q_offset: int):
+    """Host-side symbolic phase: the (q_block, kv_block) worklist.
+
+    A pair enters the worklist iff ANY element of its tile is allowed —
+    tile-granular mask structure, exactly BCSR-of-the-mask.  Cost of this
+    merge is O(#blocks), done once per (shape, pattern) and cached.
+    """
+    nq, nk = s_q // bq, s_k // bk
+    i = np.arange(nq)[:, None]
+    j = np.arange(nk)[None, :]
+    q_lo, q_hi = i * bq + q_offset, (i + 1) * bq - 1 + q_offset
+    k_lo, k_hi = j * bk, (j + 1) * bk - 1
+    # interval test: the tile holds diffs (q-k) in [q_lo-k_hi, q_hi-k_lo]
+    ok = np.ones((nq, nk), bool)
+    if causal:
+        ok &= k_lo <= q_hi
+    if window > 0:
+        in_win = (q_lo - k_hi) < window
+        if causal:
+            in_win &= (q_hi - k_lo) >= 0
+        else:
+            in_win &= (k_lo - q_hi) < window
+        ok &= in_win | np.broadcast_to(k_lo < prefix, in_win.shape)
+    # degenerate rows (can't happen for our patterns): keep one tile so the
+    # accumulator init/flush protocol stays intact
+    ok[~ok.any(axis=1), 0] = True
+
+    qi, ki, flags = [], [], []
+    for row in range(nq):
+        cols = np.nonzero(ok[row])[0]
+        f = np.zeros(len(cols), np.int32)
+        f[0] |= 1
+        f[-1] |= 2
+        qi.extend([row] * len(cols)); ki.extend(cols); flags.extend(f)
+    return (np.asarray(qi, np.int32), np.asarray(ki, np.int32),
+            np.asarray(flags, np.int32))
+
+
+def flash_mask_kernel(q, k, v, qi, ki, flags, *, bq, bk, scale, causal,
+                      window, prefix, q_offset, interpret=False):
+    """Single-head masked flash attention. q: (S, D); k, v: (T, D)."""
+    s_q, d = q.shape
+    P = qi.shape[0]
+    body = functools.partial(_body, bq=bq, bk=bk, scale=scale, causal=causal,
+                             window=window, prefix=prefix, q_offset=q_offset)
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(P,),
+            in_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda w, qi_r, ki_r, f_r: (qi_r[w], 0, 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda w, qi_r, ki_r, f_r: (ki_r[w], 0, 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda w, qi_r, ki_r, f_r: (ki_r[w], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, d),
+                                   lambda w, qi_r, ki_r, f_r: (qi_r[w], 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, LANES), jnp.float32),  # running max
+                pltpu.VMEM((bq, LANES), jnp.float32),  # normalizer
+                pltpu.VMEM((bq, d), jnp.float32),      # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_q // bq, bq, d), q.dtype),
+        interpret=interpret,
+    )(qi, ki, flags,
+      q.reshape(s_q // bq, bq, d),
+      k.reshape(k.shape[0] // bk, bk, d),
+      v.reshape(v.shape[0] // bk, bk, d)).reshape(s_q, d)

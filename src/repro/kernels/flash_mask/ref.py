@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for block-masked flash attention.
+
+The mask family is parametric (causal / sliding-window / dense-prefix),
+covering every attention pattern used by the assigned architectures:
+
+    allowed(q, k) = causal_ok(q, k) AND (window_ok(q, k) OR k < prefix)
+
+with absolute query position  q_abs = q + q_offset  (q_offset > 0 during
+decode, where queries sit at the end of a longer KV history).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mask_allowed(s_q: int, s_k: int, *, causal: bool, window: int,
+                 prefix: int, q_offset: int):
+    """(s_q, s_k) bool array of the parametric mask."""
+    q = np.arange(s_q)[:, None] + q_offset
+    k = np.arange(s_k)[None, :]
+    ok = np.ones((s_q, s_k), bool)
+    if causal:
+        ok &= k <= q
+    if window > 0:
+        ok &= ((q - k) < window) | (k < prefix)
+    return ok
+
+
+def flash_mask_ref(q, k, v, *, causal=True, window=0, prefix=0,
+                   q_offset=0, scale=None):
+    """Dense masked attention oracle. q: (S, D); k, v: (T, D)."""
+    s_q, d = q.shape
+    s_k = k.shape[0]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    ok = jnp.asarray(mask_allowed(s_q, s_k, causal=causal, window=window,
+                                  prefix=prefix, q_offset=q_offset))
+    s = jnp.where(ok, s, -jnp.inf)
+    # fully-masked rows -> zero output (mirrors the kernel's l==0 guard)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True, initial=-jnp.inf,
+                            where=ok))
+    p = jnp.where(ok, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.dot(p, v.astype(jnp.float32))
+    return jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)

@@ -1,0 +1,111 @@
+"""Jit'd wrappers + host-side schedule builders for the masked tile kernels.
+
+The schedule builder is the TPU incarnation of the paper's symbolic phase:
+because the mask's block structure bounds the output (paper §6, the 1P
+insight), the output allocation and the worklist are fully determined on the
+host before any device compute — so the device program is a single static
+numeric phase.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCSR
+from .kernel import masked_matmul_kernel, block_spgemm_kernel
+
+_ON_TPU = None
+
+
+def on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def masked_matmul(a, b, bi, bj, *, bm, bn, bk, interpret=None):
+    """Tile-MCA SDDMM: only mask-allowed output tiles are computed."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return masked_matmul_kernel(a, b, bi, bj, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# BCSR x BCSR schedule (host)
+# ---------------------------------------------------------------------------
+
+
+def build_spgemm_schedule(A: BCSR, B: BCSR, M: BCSR
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+    """Worklist (rank, posA, posB, flags) for C = M (.) (A B) on block
+    structures.
+
+    This is the paper's Heap merge done once on the host: for every mask
+    block (i, j) [rank r in M's CSR order], intersect A's block-row i with
+    B's block-column j.  Mask blocks with no contribution get a single
+    zero-fill entry (flags real-bit = 0) so the kernel's output is fully
+    defined.
+    """
+    # B column-major view for the intersection
+    from repro.core.formats import bcsr_structure_transpose
+    bt_indptr, bt_rows, bt_pos = bcsr_structure_transpose(B)
+
+    rank, pa, pb, flags = [], [], [], []
+    r = 0
+    for i in range(M.block_rows):
+        a_cols = A.block_row(i)
+        a_pos = np.arange(A.indptr[i], A.indptr[i + 1])
+        for j in M.block_row(i):
+            b_rows = bt_rows[bt_indptr[j]: bt_indptr[j + 1]]
+            b_pos = bt_pos[bt_indptr[j]: bt_indptr[j + 1]]
+            # sorted intersection of a_cols (A block-row i) and b_rows
+            ks, ai, bix = np.intersect1d(a_cols, b_rows,
+                                         return_indices=True)
+            if len(ks) == 0:
+                rank.append(r); pa.append(0); pb.append(0)
+                flags.append(1 | 4)  # first+last, not real -> zero fill
+            else:
+                for t in range(len(ks)):
+                    f = 2
+                    if t == 0:
+                        f |= 1
+                    if t == len(ks) - 1:
+                        f |= 4
+                    rank.append(r)
+                    pa.append(int(a_pos[ai[t]]))
+                    pb.append(int(b_pos[bix[t]]))
+                    flags.append(f)
+            r += 1
+    return (np.asarray(rank, np.int32), np.asarray(pa, np.int32),
+            np.asarray(pb, np.int32), np.asarray(flags, np.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nnzb_out", "bs", "interpret"))
+def _block_spgemm_jit(a_blocks, b_blocks, rank, pa, pb, flags, *,
+                      nnzb_out, bs, interpret):
+    return block_spgemm_kernel(a_blocks, b_blocks, rank, pa, pb, flags,
+                               nnzb_out, bs=bs, interpret=interpret)
+
+
+def block_spgemm(A: BCSR, B: BCSR, M: BCSR, *, interpret=None) -> BCSR:
+    """C = M (.) (A B) at tile granularity.  Output structure == M structure
+    (the 1P allocation); zero blocks are kept (callers may prune)."""
+    assert A.block_size == B.block_size == M.block_size
+    bs = A.block_size
+    rank, pa, pb, flags = build_spgemm_schedule(A, B, M)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    blocks = _block_spgemm_jit(
+        A.blocks, B.blocks, jnp.asarray(rank), jnp.asarray(pa),
+        jnp.asarray(pb), jnp.asarray(flags),
+        nnzb_out=M.nnzb, bs=bs, interpret=interpret)
+    return BCSR(M.indptr.copy(), M.indices.copy(), blocks,
+                (M.shape[0], B.shape[1]), bs)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the masked tile kernels.
+
+These are the ground truth the Pallas kernels (interpret=True on CPU, Mosaic
+on TPU) are validated against, shape-for-shape.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_matmul_ref(a, b, bi, bj, *, bm, bn):
+    """Tile-MCA SDDMM oracle: dense C = A @ B, then gather allowed tiles.
+
+    a: (M, K), b: (K, N), bi/bj: (nnzb,) block coords of allowed tiles.
+    Returns (nnzb, bm, bn) float32.
+    """
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    out = []
+    for i, j in zip(np.asarray(bi), np.asarray(bj)):
+        out.append(c[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn])
+    return jnp.stack(out) if out else jnp.zeros((0, bm, bn), jnp.float32)
+
+
+def block_spgemm_ref(a_dense, b_dense, mask_bi, mask_bj, *, bs):
+    """BCSR x BCSR masked SpGEMM oracle, tile-granular mask.
+
+    Returns (nnzb_m, bs, bs) float32: the dense product gathered at the mask's
+    allowed blocks (blocks the product never touches come out zero — paper
+    Fig. 1's "mask entry with no output").
+    """
+    c = jnp.dot(a_dense.astype(jnp.float32), b_dense.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    out = []
+    for i, j in zip(np.asarray(mask_bi), np.asarray(mask_bj)):
+        out.append(c[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs])
+    return jnp.stack(out) if out else jnp.zeros((0, bs, bs), jnp.float32)

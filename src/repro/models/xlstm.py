@@ -1,0 +1,262 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+The mLSTM's chunkwise-parallel form computes, inside each chunk,
+
+    H = (D (.) (Q Kᵀ)) V
+
+where D is the lower-triangular exp-gate decay mask — the same masked tile
+product as the paper's C = M (.) (A B) (DESIGN.md §5).  Cross-chunk state is
+a (dk x dv) matrix-memory recurrence with log-space stabilization; the
+chunkwise path is validated against the exact sequential recurrence in
+tests/test_models.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, XLSTMCfg
+from .common import dense_init, rms_norm, shard, DP, TP, pscan
+
+NEG = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    x: XLSTMCfg = cfg.xlstm
+    hd = x.head_dim or (cfg.d_model // cfg.n_heads)
+    return x, cfg.n_heads, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    xc, nh, hd = _dims(cfg)
+    d_in = nh * hd
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, d_in)),
+        "wk": dense_init(ks[1], (cfg.d_model, d_in)),
+        "wv": dense_init(ks[2], (cfg.d_model, d_in)),
+        "w_if": dense_init(ks[3], (cfg.d_model, 2 * nh), scale=0.5),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]),
+        "w_og": dense_init(ks[4], (cfg.d_model, d_in), scale=0.5),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, cfg.d_model)),
+    }
+
+
+def _mlstm_gates(params, cfg, x):
+    xc, nh, hd = _dims(cfg)
+    b, L, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, L, nh, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, L, nh, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, L, nh, hd)
+    if_pre = (x @ params["w_if"].astype(x.dtype)).astype(jnp.float32) \
+        + params["b_if"]
+    log_i = if_pre[..., :nh]                       # i = exp(i_pre)
+    log_f = -jax.nn.softplus(-if_pre[..., nh:])    # f = sigmoid(f_pre)
+    og = jax.nn.sigmoid(x @ params["w_og"].astype(x.dtype))
+    return q, k, v, log_i, log_f, og
+
+
+def apply_mlstm(params, cfg: ModelConfig, x, positions=None):
+    """Chunkwise-parallel mLSTM. x: (B, L, D) -> (B, L, D)."""
+    xc, nh, hd = _dims(cfg)
+    b, L, _ = x.shape
+    Q = min(xc.chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    q, k, v, log_i, log_f, og = _mlstm_gates(params, cfg, x)
+    scale = hd ** -0.5
+
+    qh = q.reshape(b, nc, Q, nh, hd).astype(jnp.float32) * scale
+    kh = k.reshape(b, nc, Q, nh, hd).astype(jnp.float32)
+    vh = v.reshape(b, nc, Q, nh, hd).astype(jnp.float32)
+    li = log_i.reshape(b, nc, Q, nh)
+    lf = log_f.reshape(b, nc, Q, nh)
+
+    F = jnp.cumsum(lf, axis=2)                     # within-chunk cum log f
+    Ftot = F[:, :, -1, :]                          # (b,nc,nh)
+
+    # ---- intra-chunk masked product:  D_ij = exp(F_i - F_j + li_j) --------
+    logD = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    ii = jnp.arange(Q)
+    tri = ii[:, None] >= ii[None, :]
+    logD = jnp.where(tri[None, None, :, :, None], logD, NEG)
+    m_intra = jnp.max(logD, axis=3)                # (b,nc,Q,nh)
+
+    # ---- cross-chunk recurrence with stabilizer ---------------------------
+    # carry: (C (b,nh,dk,dv), n (b,nh,dk), m (b,nh))
+    def step(carry, xs):
+        C, n, m = carry
+        kh_c, vh_c, li_c, F_c, Ftot_c = xs
+        # per-position source log-weights for the state update
+        lw = Ftot_c[:, None, :] - F_c + li_c       # (b,Q,nh)
+        m_loc = jnp.max(lw, axis=1)                # (b,nh)
+        m_new = jnp.maximum(Ftot_c + m, m_loc)
+        w = jnp.exp(lw - m_new[:, None, :])        # (b,Q,nh)
+        decay = jnp.exp(Ftot_c + m - m_new)        # (b,nh)
+        C_new = C * decay[..., None, None] + jnp.einsum(
+            "bqhk,bqhv->bhkv", kh_c * w[..., None], vh_c)
+        n_new = n * decay[..., None] + jnp.einsum(
+            "bqhk->bhk", kh_c * w[..., None])
+        return (C_new, n_new, m_new), (C, n, m)
+
+    C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), NEG, jnp.float32)
+    xs = (kh.transpose(1, 0, 2, 3, 4), vh.transpose(1, 0, 2, 3, 4),
+          li.transpose(1, 0, 2, 3), F.transpose(1, 0, 2, 3),
+          Ftot.transpose(1, 0, 2))
+    _, (C_prev, n_prev, m_prev) = pscan(step, (C0, n0, m0), xs)
+    C_prev = C_prev.transpose(1, 0, 2, 3, 4)       # (b,nc,nh,dk,dv)
+    n_prev = n_prev.transpose(1, 0, 2, 3)
+    m_prev = m_prev.transpose(1, 0, 2)
+
+    # combined stabilizer per position: max(intra row max, inter decay + m)
+    log_inter = F + m_prev[:, :, None, :]          # (b,nc,Q,nh)
+    m_row = jnp.maximum(m_intra, log_inter)
+
+    D = jnp.exp(logD - m_row[:, :, :, None, :])
+    s = jnp.einsum("bcqhd,bckhd->bcqkh", qh, kh) * D
+    h_intra = jnp.einsum("bcqkh,bckhv->bcqhv", s, vh)
+    l_intra = jnp.sum(s, axis=3)                   # (b,nc,Q,nh)
+
+    w_inter = jnp.exp(log_inter - m_row)           # (b,nc,Q,nh)
+    h_inter = jnp.einsum("bcqhk,bchkv->bcqhv", qh * w_inter[..., None],
+                         C_prev)
+    l_inter = jnp.einsum("bcqhk,bchk->bcqh", qh * w_inter[..., None], n_prev)
+
+    l = l_intra + l_inter
+    denom = jnp.maximum(jnp.abs(l), jnp.exp(-m_row))
+    h = (h_intra + h_inter) / denom[..., None]
+
+    h = h.reshape(b, L, nh * hd).astype(x.dtype) * og
+    h = rms_norm(h, params["norm_scale"])
+    h = shard(h, DP, None, TP)
+    return h @ params["out_proj"].astype(x.dtype)
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    xc, nh, hd = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), NEG, jnp.float32),
+    }
+
+
+def apply_mlstm_decode(params, cfg: ModelConfig, x, cache, pos=None):
+    """Exact sequential recurrence, one step. x: (B, 1, D)."""
+    xc, nh, hd = _dims(cfg)
+    b = x.shape[0]
+    q, k, v, log_i, log_f, og = _mlstm_gates(params, cfg, x)
+    qf = q[:, 0].astype(jnp.float32) * hd ** -0.5  # (b,nh,hd)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    li, lf = log_i[:, 0], log_f[:, 0]              # (b,nh)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    decay = jnp.exp(lf + m - m_new)
+    inp = jnp.exp(li - m_new)
+    C = C * decay[..., None, None] + jnp.einsum(
+        "bhk,bhv->bhkv", kf * inp[..., None], vf)
+    n = n * decay[..., None] + kf * inp[..., None]
+    h_num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    l = jnp.einsum("bhk,bhk->bh", qf, n)
+    denom = jnp.maximum(jnp.abs(l), jnp.exp(-m_new))
+    h = (h_num / denom[..., None]).reshape(b, 1, nh * hd).astype(x.dtype)
+    h = rms_norm(h * og, params["norm_scale"])
+    out = h @ params["out_proj"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scalar recurrence, block-diagonal recurrent weights)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig):
+    xc, nh, hd = _dims(cfg)
+    d_in = nh * hd
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, 4 * d_in)),
+        "r_blocks": dense_init(ks[1], (4, nh, hd, hd), scale=0.5),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d_in,)), 3.0 * jnp.ones((d_in,)),
+             jnp.zeros((2 * d_in,))]),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_in, cfg.d_model)),
+    }
+
+
+def _slstm_cell(params, cfg, x_pre, state):
+    """One step. x_pre: (B, 4*d_in) input preactivations (no recurrent)."""
+    xc, nh, hd = _dims(cfg)
+    d_in = nh * hd
+    c, n, m, h = state
+    hb = h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", hb,
+                     params["r_blocks"].astype(h.dtype))  # (b,4,nh,hd)
+    pre = x_pre.reshape(-1, 4, nh, hd) + rec \
+        + params["b_gates"].reshape(4, nh, hd).astype(h.dtype)
+    pre = pre.astype(jnp.float32)
+    li = pre[:, 0]                                  # log input gate
+    lf = -jax.nn.softplus(-pre[:, 1])               # log sigmoid forget
+    z = jnp.tanh(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * z
+    n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(li - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new.astype(h.dtype))
+
+
+def apply_slstm(params, cfg: ModelConfig, x, positions=None):
+    """Sequential scan over time. x: (B, L, D)."""
+    xc, nh, hd = _dims(cfg)
+    b, L, _ = x.shape
+    d_in = nh * hd
+    x_pre = x @ params["w_in"].astype(x.dtype)      # (B, L, 4*d_in)
+
+    def step(state, xt):
+        new = _slstm_cell(params, cfg, xt, state)
+        return new, new[3]
+
+    init = slstm_cache_init(cfg, b)
+    state = (init["c"], init["n"], init["m"],
+             jnp.zeros((b, nh, hd), x.dtype))
+    _, hs = pscan(step, state, x_pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, L, d_in)
+    h = rms_norm(h, params["norm_scale"])
+    h = shard(h, DP, None, TP)
+    return h @ params["out_proj"].astype(x.dtype)
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    xc, nh, hd = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh, hd), NEG, jnp.float32),
+        "h": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+def apply_slstm_decode(params, cfg: ModelConfig, x, cache, pos=None):
+    xc, nh, hd = _dims(cfg)
+    b = x.shape[0]
+    x_pre = (x[:, 0] @ params["w_in"].astype(x.dtype))
+    state = (cache["c"], cache["n"], cache["m"],
+             cache["h"].astype(x.dtype))
+    c, n, m, h = _slstm_cell(params, cfg, x_pre, state)
+    out = rms_norm(h.reshape(b, 1, nh * hd), params["norm_scale"])
+    out = out @ params["out_proj"].astype(x.dtype)
+    return out, {"c": c, "n": n, "m": m, "h": h.astype(jnp.float32)}

@@ -1,0 +1,96 @@
+"""AdamW with cosine schedule + ZeRO-1 sharding helper (no optax on box).
+
+Parameters are fp32 masters (layers cast to activation dtype at use);
+moments are fp32.  ``zero1_specs`` shards the moments (and optionally the
+masters) over the data axis — the first axis whose size divides evenly,
+skipping the scan-stacked layer axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup, 1), 1.0)
+        t = jnp.clip((step - self.warmup) /
+                     max(self.total_steps - self.warmup, 1), 0.0, 1.0)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return self.lr * warm * cos
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)) + 1e-12)
+        scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m2 / (1 - self.b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + \
+                self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_m, new_v), \
+            {"lr": lr, "grad_norm": gnorm}
+
+
+def zero1_specs(params, param_specs, data_axis: str = "data",
+                min_size: int = 1):
+    """Moment shardings: add the data axis on the first free divisible dim.
+
+    The scan-stacked layer axis (leading, spec entry None by convention) is
+    skipped when a later dim can take the sharding — layer counts rarely
+    divide the mesh.
+    """
+    def one(p, spec):
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        # prefer dims 1.. (skip stacked/layer dim 0) then fall back to dim 0
+        for idx in list(range(1, p.ndim)) + [0]:
+            if entries[idx] is None and p.shape[idx] >= min_size:
+                entries[idx] = data_axis
+                break
+        return P(*entries)
+    return jax.tree.map(one, params, param_specs)

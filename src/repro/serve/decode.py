@@ -1,0 +1,58 @@
+"""Batched serving: prefill + token-by-token decode (greedy / temperature).
+
+``serve_step`` is the unit the decode-shape dry-runs lower: one new token
+for every sequence in the batch against a seq_len-sized cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, cache, pos, encoder_out=None):
+        if cfg.family == "audio":
+            logits, cache = T.decode_step(params, cfg, token, cache, pos,
+                                          encoder_out=encoder_out)
+        else:
+            logits, cache = T.decode_step(params, cfg, token, cache, pos)
+        return logits, cache
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens, *, max_new: int = 16,
+             temperature: float = 0.0, key=None, encoder_out=None):
+    """Greedy/temperature generation.  prompt_tokens: (B, S0) int32.
+
+    Teacher-forces the prompt through decode_step (exercising the cache
+    path), then samples ``max_new`` tokens.  Returns (B, S0+max_new).
+    """
+    b, s0 = prompt_tokens.shape
+    cache = T.init_cache(cfg, b, s0 + max_new)
+    step = jax.jit(make_serve_step(cfg))
+    logits = None
+    for t in range(s0):
+        logits, cache = step(params, prompt_tokens[:, t], cache,
+                             jnp.full((b,), t, jnp.int32),
+                             encoder_out=encoder_out)
+    out = [prompt_tokens]
+    cur = None
+    for i in range(max_new):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            cur = jnp.argmax(logits, axis=-1)
+        cur = cur.astype(jnp.int32)
+        out.append(cur[:, None])
+        if i < max_new - 1:
+            logits, cache = step(params, cur, cache,
+                                 jnp.full((b,), s0 + i, jnp.int32),
+                                 encoder_out=encoder_out)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,25 @@
+"""Distributed masked SpGEMM: subprocess with 8 forced host devices.
+
+The main pytest process must keep seeing 1 device (smoke tests depend on
+it), so the multi-device checks run in a child interpreter.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_distributed_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "dist_check.py")],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "DIST_ALL_OK" in proc.stdout

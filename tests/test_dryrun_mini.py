@@ -1,0 +1,22 @@
+"""Mini multi-pod dry-run: the production spec machinery must lower and
+compile smoke configs on a (2,2,2) pod mesh (subprocess, 8 host devices)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_mini_dryrun():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "dryrun_mini_check.py")],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert "MINI_DRYRUN_OK" in r.stdout

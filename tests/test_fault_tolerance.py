@@ -1,0 +1,48 @@
+"""Fault tolerance: crash at step 4 (8 devices), elastic resume on 4
+devices, trajectory must equal an uninterrupted oracle run."""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_phase(phase, ckpt):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "ft_check.py"), phase, ckpt],
+        capture_output=True, text=True, timeout=540, env=env)
+
+
+def losses_of(out):
+    return {int(m.group(1)): float(m.group(2))
+            for m in re.finditer(r"LOSS (\d+) ([0-9.]+)", out)}
+
+
+@pytest.mark.slow
+def test_crash_resume_elastic(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    full = run_phase("full", ckpt)
+    assert full.returncode == 42, full.stdout + full.stderr   # crashed
+    assert "CRASH" in full.stdout
+
+    resume = run_phase("resume", ckpt)
+    assert resume.returncode == 0, resume.stdout + resume.stderr
+    oracle = run_phase("oracle", "")
+    assert oracle.returncode == 0, oracle.stdout + oracle.stderr
+
+    l_full = losses_of(full.stdout)
+    l_res = losses_of(resume.stdout)
+    l_orc = losses_of(oracle.stdout)
+    # pre-crash steps match oracle
+    for s in range(4):
+        assert abs(l_full[s] - l_orc[s]) < 1e-4, (s, l_full[s], l_orc[s])
+    # resumed (4-device!) steps match oracle (8-device) trajectory
+    for s in (4, 5):
+        assert abs(l_res[s] - l_orc[s]) < 5e-3, (s, l_res[s], l_orc[s])

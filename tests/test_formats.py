@@ -1,0 +1,106 @@
+"""Storage formats: CSR/PaddedCSR/BCSR round-trips and invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (
+    CSR, csr_from_dense, csr_from_coo, padded_from_csr, padded_from_dense,
+    bcsr_from_dense, bcsr_structure_transpose, erdos_renyi, rmat,
+    random_mask_like, tril,
+)
+
+
+def rand_dense(seed, m, n, density):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((m, n)) < density)
+            * rng.uniform(0.5, 1.5, (m, n))).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 20), n=st.integers(1, 20),
+       density=st.floats(0, 1))
+def test_csr_dense_roundtrip(seed, m, n, density):
+    a = rand_dense(seed, m, n, density)
+    np.testing.assert_array_equal(csr_from_dense(a).to_dense(), a)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 16), n=st.integers(1, 16))
+def test_csr_transpose(seed, m, n):
+    a = rand_dense(seed, m, n, 0.3)
+    np.testing.assert_array_equal(csr_from_dense(a).transpose().to_dense(), a.T)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 16), n=st.integers(1, 16),
+       density=st.floats(0, 1))
+def test_padded_roundtrip(seed, m, n, density):
+    a = rand_dense(seed, m, n, density)
+    p = padded_from_dense(a)
+    np.testing.assert_allclose(np.asarray(p.to_dense()), a, rtol=1e-6)
+    # rows sorted, pads == n
+    cols = np.asarray(p.cols)
+    for i in range(m):
+        real = cols[i][: int(p.lens[i])]
+        assert (np.diff(real) > 0).all()
+        assert (cols[i][int(p.lens[i]):] == n).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 33), n=st.integers(1, 33),
+       bs=st.sampled_from([2, 4, 8]))
+def test_bcsr_roundtrip(seed, m, n, bs):
+    a = rand_dense(seed, m, n, 0.2)
+    b = bcsr_from_dense(a, bs)
+    np.testing.assert_array_equal(b.to_dense(), a)
+
+
+def test_bcsr_structure_transpose():
+    a = rand_dense(3, 24, 16, 0.3)
+    b = bcsr_from_dense(a, 4)
+    indptr_t, rows_t, pos_t = bcsr_structure_transpose(b)
+    # reconstruct block set from the transposed view
+    seen = set()
+    for j in range(len(indptr_t) - 1):
+        for p in range(indptr_t[j], indptr_t[j + 1]):
+            i = rows_t[p]
+            seen.add((int(i), int(j)))
+            assert int(b.indices[pos_t[p]]) == j
+    want = set()
+    for i in range(b.block_rows):
+        for j in b.block_row(i):
+            want.add((int(i), int(j)))
+    assert seen == want
+
+
+def test_coo_duplicate_sum():
+    c = csr_from_coo([0, 0, 1], [1, 1, 0], [1.0, 2.0, 5.0], (2, 2))
+    d = c.to_dense()
+    assert d[0, 1] == 3.0 and d[1, 0] == 5.0 and c.nnz == 2
+
+
+def test_erdos_renyi_properties():
+    g = erdos_renyi(200, 8.0, seed=1)
+    assert g.shape == (200, 200)
+    assert abs(g.nnz / 200 - 8.0) < 1.5  # ~Poisson(8) mean
+
+
+def test_rmat_properties():
+    g = rmat(8, edge_factor=8, seed=2)
+    n = 1 << 8
+    assert g.shape == (n, n)
+    d = g.to_dense()
+    np.testing.assert_array_equal(d, d.T)   # symmetric
+    assert np.diagonal(d).sum() == 0        # no self loops
+
+
+def test_tril_and_mask():
+    g = erdos_renyi(50, 5.0, seed=3)
+    L = tril(g)
+    d = L.to_dense()
+    assert np.triu(d).sum() == 0
+    m = random_mask_like(g, 0.5, seed=4)
+    gd = g.to_dense() != 0
+    md = m.to_dense() != 0
+    assert (md & ~gd).sum() == 0  # mask pattern subset of g

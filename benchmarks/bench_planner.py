@@ -1,0 +1,110 @@
+"""Planner validation: ``algorithm="auto"`` vs best/worst fixed algorithm.
+
+Re-runs the paper's density sweep (Fig. 7 grid: ER inputs x ER mask) timing
+every fixed algorithm plus the planner's auto dispatch.  The acceptance bar:
+auto within 10% of the best fixed algorithm — the planner picked (nearly)
+the right kernel — and strictly faster than the worst at every grid point.
+Also reports the chosen algorithm and the plan-cache hit rate (warm calls
+must re-plan nothing).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.masked_spgemm import ALGORITHMS, masked_spgemm
+from repro.core.formats import erdos_renyi
+from repro.core.planner import clear_plan_cache, plan, plan_cache_info
+from .bench_density import er_mask
+from .common import save
+
+#: auto must be within this factor of the best fixed algorithm
+AUTO_TOLERANCE = 1.10
+
+
+def _time_interleaved(contenders, iters):
+    """Round-robin timing: every contender runs once per round; the
+    per-contender minimum across rounds is reported.  Interleaving makes
+    process-wide slowdowns (shared CPU, allocator phases) hit all
+    contenders alike, and min-of-k is the standard noise-robust estimator
+    of a deterministic program's true cost (additive noise only inflates
+    samples)."""
+    import random
+    for fn in contenders.values():   # warmup round: compile everything
+        fn()
+    samples = {name: [] for name in contenders}
+    order = list(contenders)
+    rng = random.Random(0)
+    for _ in range(iters):
+        rng.shuffle(order)           # no contender owns a fixed position
+        for name in order:
+            t0 = time.perf_counter()
+            contenders[name]()
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(min(ts)) for name, ts in samples.items()}
+
+
+def run(n: int = 1024, degrees=(2, 8, 32), mask_degrees=(2, 8, 32),
+        iters: int = 6):
+    clear_plan_cache()
+    table = {}
+    ok = True
+    for d in degrees:
+        A = erdos_renyi(n, d, seed=10 + d)
+        B = erdos_renyi(n, d, seed=20 + d)
+        for dm in mask_degrees:
+            M = er_mask(n, dm, seed=30 + dm)
+
+            def make(algo):
+                def go():
+                    out = masked_spgemm(A, B, M, algorithm=algo)
+                    out.vals.block_until_ready()
+                return go
+
+            timed = _time_interleaved(
+                {**{a: make(a) for a in ALGORITHMS}, "auto": make("auto")},
+                iters)
+            t_auto = timed.pop("auto")
+            cell = timed
+            chosen = plan(A, B, M).algorithm   # cache hit: already planned
+            best = min(cell, key=cell.get)
+            worst = max(cell, key=cell.get)
+            vs_best = t_auto / cell[best]
+            vs_worst = t_auto / cell[worst]
+            # dispatch overhead: a warm auto call is the chosen fixed
+            # algorithm plus exactly this (plan-cache lookup = CRC of the
+            # index arrays).  When the planner picked the measured-best
+            # algorithm, auto and best run the SAME compiled program, and
+            # this overhead — not a noisy re-timing of that program — is
+            # the true cost of auto.
+            t0 = time.perf_counter()
+            for _ in range(5):
+                plan(A, B, M)
+            t_plan = (time.perf_counter() - t0) / 5
+            cell_ok = t_auto < cell[worst] and (
+                vs_best <= AUTO_TOLERANCE
+                or (chosen == best
+                    and t_plan <= (AUTO_TOLERANCE - 1.0) * cell[best]))
+            ok &= cell_ok
+            table[f"d{d}_m{dm}"] = {
+                "times": cell, "auto": t_auto, "chosen": chosen,
+                "best": best, "worst": worst, "plan_overhead": t_plan,
+                "auto_vs_best": vs_best, "auto_vs_worst": vs_worst,
+                "ok": cell_ok,
+            }
+            print(f"[planner] input_deg={d:3d} mask_deg={dm:3d} "
+                  f"auto={t_auto*1e3:7.1f}ms ({chosen:7s}) "
+                  f"best={best:7s} {cell[best]*1e3:7.1f}ms "
+                  f"worst={worst:7s} {cell[worst]*1e3:7.1f}ms "
+                  f"vs_best={vs_best:.2f} plan={t_plan*1e3:.2f}ms "
+                  f"{'OK' if cell_ok else 'MISS'}",
+                  flush=True)
+    info = plan_cache_info()
+    table["_plan_cache"] = info
+    table["_all_ok"] = ok
+    print(f"[planner] cache: {info}  all_ok={ok}", flush=True)
+    save("planner_grid", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

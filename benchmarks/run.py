@@ -13,22 +13,30 @@ import argparse
 import time
 import traceback
 
-ORDER = ("density", "triangle", "rmat", "scaling", "ktruss", "bc", "block")
+ORDER = ("density", "planner", "triangle", "rmat", "scaling", "ktruss",
+         "bc", "block")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + 1 iteration (CI smoke job)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ORDER)
 
     from . import (bench_bc, bench_block_kernel, bench_density,
-                   bench_ktruss, bench_rmat_scale, bench_scaling,
-                   bench_triangle)
+                   bench_ktruss, bench_planner, bench_rmat_scale,
+                   bench_scaling, bench_triangle)
+    if args.smoke:
+        density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
+                          iters=3)
+    else:
+        density_kw = dict(n=2048 if args.full else 1024)
     jobs = {
-        "density": lambda: bench_density.run(
-            n=2048 if args.full else 1024),
+        "density": lambda: bench_density.run(**density_kw),
+        "planner": lambda: bench_planner.run(**density_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

@@ -2,14 +2,16 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers: the six algorithms, semirings, complemented masks, the block/tile
-path, and triangle counting.
+Covers: the adaptive planner (``algorithm="auto"``, the default), the six
+fixed algorithms, semirings, complemented masks, the block/tile path, and
+triangle counting.
 """
 import numpy as np
 
 from repro.core.formats import (bcsr_from_dense, csr_from_dense,
                                 erdos_renyi, tril)
 from repro.core.masked_spgemm import masked_spgemm, dense_oracle
+from repro.core.planner import plan, plan_cache_info
 from repro.core.semiring import MIN_PLUS, PLUS_TIMES
 from repro.graphs import triangle_count
 from repro.kernels.masked_matmul.ops import block_spgemm
@@ -24,7 +26,19 @@ def main():
          ).astype(np.float32)
     M = (rng.random((m, n)) < 0.3).astype(np.float32)
 
-    # --- 1. C = M .* (A @ B) with every algorithm -------------------------
+    # --- 0. the default entry point: let the planner pick -----------------
+    # ``algorithm="auto"`` inspects cheap structural statistics (densities,
+    # padded widths, a sampled symbolic probe) and dispatches to the
+    # cheapest kernel per the paper's Sec. 7-8 guidelines.  Plans are
+    # cached by structural signature, so repeated shapes skip re-planning.
+    out = masked_spgemm(csr_from_dense(A), csr_from_dense(B),
+                        csr_from_dense(M))            # algorithm="auto"
+    p = plan(csr_from_dense(A), csr_from_dense(B), csr_from_dense(M))
+    print(f"auto     nnz(C) = {int(out.nnz)}  "
+          f"(planner chose {p.algorithm!r}; "
+          f"tile_eligible={p.tile_eligible}; cache={plan_cache_info()})")
+
+    # --- 1. C = M .* (A @ B) with every fixed algorithm -------------------
     for algo in ("msa", "hash", "mca", "heap", "heapdot", "inner"):
         out = masked_spgemm(csr_from_dense(A), csr_from_dense(B),
                             csr_from_dense(M), algorithm=algo)

@@ -1,3 +1,15 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .masked_spgemm import (ALGORITHMS, MaskedSpGEMMResult, dense_oracle,
+                            masked_spgemm, masked_spgemm_batched)
+from .planner import (Plan, PlanStats, clear_plan_cache, collect_stats,
+                      decide, plan, plan_batch, plan_cache_info,
+                      rank_algorithms)
+
+__all__ = [
+    "ALGORITHMS", "MaskedSpGEMMResult", "dense_oracle", "masked_spgemm",
+    "masked_spgemm_batched", "Plan", "PlanStats", "clear_plan_cache",
+    "collect_stats", "decide", "plan", "plan_batch", "plan_cache_info",
+    "rank_algorithms",
+]

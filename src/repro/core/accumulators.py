@@ -355,3 +355,90 @@ def symbolic_row(m_cols, a_cols, a_len, B_cols, B_lens, n: int, kdim: int):
 
     states = jax.lax.fori_loop(0, a_cols.shape[0], body, states)
     return jnp.sum((states[:pm] & (m_cols < n)).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Cost hooks (planner): per-algorithm work models over padded row widths
+# ---------------------------------------------------------------------------
+#
+# The planner (``planner.py``) chooses among the accumulators by evaluating
+# these models on cheap structural statistics.  The models describe THIS
+# vectorized implementation, not the paper's scalar CPU loops: every row is
+# padded to the static widths wa/wb/pm, so padded products (not true flops)
+# are what the hardware executes.  Units: estimated milliseconds per 1024
+# output rows on the calibration host; only the *ranking* matters, and the
+# constants are tunable (see ROADMAP "Open items" for the re-calibration
+# procedure against BENCH_density / the rmat suite).
+
+#: Calibration constants, fit to benchmarks/bench_density.py (n=1024 ER grid)
+#: plus skewed R-MAT and dense-mask probes on the CPU backend.
+COST_CONSTANTS = {
+    # dense (n+1)-wide state init/gather + wa sequential scatter rounds
+    "msa": dict(base=12.0, per_n=0.035, per_flop=0.25, per_mask=0.5),
+    # table build is a sequential probe loop over mask nonzeros; probing
+    # inside the flop loop is a while-loop per batch of wb queries
+    "hash": dict(base=40.0, per_flop=0.30, per_mask=1.5, per_slot=0.01),
+    # wa merge rounds of wb searchsorted lookups into the pm-long mask row
+    "mca": dict(base=45.0, per_merge=0.045),
+    # sort of the wa*wb expansion + segmented reduce + mask alignment
+    "heap": dict(base=25.0, per_sort=0.05, per_mask=1.0),
+    "heapdot": dict(base=25.0, per_sort=0.05, per_mask=1.0, per_inspect=0.01),
+    # one vmapped sparse dot per mask nonzero (no sequential flop loop);
+    # the large base is the host-side B^T transpose+pad paid every call
+    "inner": dict(base=51.0, per_dot=0.0157),
+}
+
+
+def _log2(x: float) -> float:
+    import math
+    return math.log2(max(2.0, float(x)))
+
+
+def msa_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["msa"]
+    return (c["base"] + c["per_n"] * (n + 1)
+            + c["per_flop"] * wa * wb + c["per_mask"] * pm)
+
+
+def hash_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["hash"]
+    return (c["base"] + c["per_flop"] * wa * wb
+            + c["per_mask"] * pm + c["per_slot"] * _hash_size(max(1, pm)))
+
+
+def mca_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["mca"]
+    return c["base"] + c["per_merge"] * wa * wb * _log2(pm + 2)
+
+
+def heap_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["heap"]
+    e = wa * wb
+    return c["base"] + c["per_sort"] * e * _log2(e + 2) + c["per_mask"] * pm
+
+
+def heapdot_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["heapdot"]
+    e = wa * wb
+    return (c["base"] + c["per_sort"] * e * _log2(e + 2)
+            + c["per_mask"] * pm + c["per_inspect"] * e * _log2(pm + 2))
+
+
+def inner_cost(*, n, wa, wb, wbt, pm):
+    c = COST_CONSTANTS["inner"]
+    return c["base"] + c["per_dot"] * pm * wa * _log2(wbt + 2)
+
+
+#: algorithm name -> cost hook; keys mirror masked_spgemm.ALGORITHMS
+COST_HOOKS = {
+    "msa": msa_cost,
+    "hash": hash_cost,
+    "mca": mca_cost,
+    "heap": heap_cost,
+    "heapdot": heapdot_cost,
+    "inner": inner_cost,
+}
+
+#: algorithms whose row kernels accept ``complement=True`` (paper Sec. 8.4:
+#: hash/MCA/inner require an explicit mask)
+SUPPORTS_COMPLEMENT = frozenset({"msa", "heap", "heapdot"})

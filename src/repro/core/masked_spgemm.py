@@ -108,20 +108,36 @@ def _masked_spgemm_padded(M: PaddedCSR, A: PaddedCSR, B_or_Bt: PaddedCSR,
     return f(M.cols, A.cols, A.vals, A.lens)
 
 
-def masked_spgemm(A, B, M, *, algorithm: str = "msa",
+def masked_spgemm(A, B, M, *, algorithm: str = "auto",
                   semiring: Semiring = PLUS_TIMES, complement: bool = False,
                   two_phase: bool = False, n_inspect: Optional[int] = None,
-                  widths: Optional[Tuple[int, int, int]] = None):
+                  widths: Optional[Tuple[int, int, int]] = None,
+                  plan=None):
     """C = M (.) (A B)   [or  C = (not M) (.) (A B)].
 
     A, B, M: host CSR (or PaddedCSR already on device).  Returns a
     MaskedSpGEMMResult (mask-aligned) for the normal mask; for the
     complemented mask returns (dense_vals, dense_present) since the output
     is not a subset of the mask pattern.
+
+    ``algorithm="auto"`` (the default) consults the planner: cheap
+    structural statistics pick the cheapest kernel per the paper's Sec. 7-8
+    guidelines, memoized by structural signature so repeated shapes skip
+    re-planning.  A precomputed ``plan`` (from ``planner.plan``) overrides
+    both ``algorithm`` and ``widths``.
     """
     m, k = A.shape
     k2, n = B.shape
     assert k == k2, (A.shape, B.shape)
+    if plan is None and algorithm == "auto":
+        from .planner import plan as _plan
+        plan = _plan(A, B, M, complement=complement, semiring=semiring)
+    if plan is not None:
+        algorithm = plan.algorithm
+        if widths is None:
+            widths = plan.widths
+        if n_inspect is None:
+            n_inspect = plan.n_inspect
     wa, wb, wm = widths or (None, None, None)
 
     A_p = A if isinstance(A, PaddedCSR) else padded_from_csr(A, wa)
@@ -160,6 +176,72 @@ def symbolic_phase(A: PaddedCSR, M: PaddedCSR, B: Optional[PaddedCSR], *,
     f = jax.vmap(lambda mc, ac, al: acc.symbolic_row(
         mc, ac, al, B.cols, B.lens, n, kdim))
     return f(M.cols, A.cols, A.lens)
+
+
+# ---------------------------------------------------------------------------
+# Batched driver: one plan + one compiled program for same-shape operands
+# ---------------------------------------------------------------------------
+
+
+def _stack_padded(mats, width: int) -> PaddedCSR:
+    """Pad each CSR to ``width`` and stack into a batched PaddedCSR whose
+    leaves carry a leading batch dim (vmap slices it back off)."""
+    padded = [m if isinstance(m, PaddedCSR) else padded_from_csr(m, width)
+              for m in mats]
+    return PaddedCSR(
+        jnp.stack([p.cols for p in padded]),
+        jnp.stack([p.vals for p in padded]),
+        jnp.stack([p.lens for p in padded]),
+        padded[0].shape)
+
+
+def masked_spgemm_batched(As, B, Ms, *, algorithm: str = "auto",
+                          semiring: Semiring = PLUS_TIMES,
+                          complement: bool = False, plan=None):
+    """Batch of C_i = M_i (.) (A_i B) with ONE plan and ONE compiled program.
+
+    ``As``/``Ms``: equal-length sequences of same-shape operands (CSR or
+    PaddedCSR); ``B`` is shared.  This is the multi-source traversal case
+    (betweenness centrality): per-batch structures differ, but one plan —
+    with pad widths widened to the batch maxima — serves every element, so
+    the device sees a single vmapped program instead of len(As) dispatches.
+
+    Returns a list of MaskedSpGEMMResult (mask case), or stacked dense
+    ``(vals, present)`` of shape (batch, m, n) under ``complement``.
+    """
+    As, Ms = list(As), list(Ms)
+    if len(As) != len(Ms) or not As:
+        raise ValueError("As/Ms must be equal-length, non-empty")
+    m, k = As[0].shape
+    _, n = B.shape
+    if plan is None and algorithm == "auto":
+        from .planner import plan_batch
+        plan = plan_batch(As, B, Ms, complement=complement,
+                          semiring=semiring)
+    if plan is not None:
+        algorithm = plan.algorithm
+        wa, wb, wm = plan.widths
+    else:
+        wa = max(1, max(int(np.diff(a.indptr).max(initial=0)) for a in As))
+        wm = max(1, max(int(np.diff(mm.indptr).max(initial=0)) for mm in Ms))
+        wb = None
+
+    A_b = _stack_padded(As, wa)
+    M_b = _stack_padded(Ms, wm)
+    if algorithm == "inner":
+        Bt = B.transpose() if isinstance(B, CSR) else B
+        B_p = Bt if isinstance(Bt, PaddedCSR) else padded_from_csr(Bt, wb)
+    else:
+        B_p = B if isinstance(B, PaddedCSR) else padded_from_csr(B, wb)
+
+    run = jax.vmap(lambda Mp, Ap: _masked_spgemm_padded(
+        Mp, Ap, B_p, algorithm=algorithm, sr=semiring,
+        complement=complement, n_inspect=None, shape=(m, n), kdim=k))
+    vals, present = run(M_b, A_b)
+    if complement:
+        return vals, present
+    return [MaskedSpGEMMResult(vals[i], present[i], M_b.cols[i], (m, n))
+            for i in range(len(As))]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,508 @@
+"""Adaptive algorithm planner for Masked SpGEMM (paper Sec. 7-8).
+
+The paper's headline result is that no single Masked-SpGEMM algorithm wins
+everywhere: "matrix and mask density, mask structure and cache behavior play
+a vital role".  This module turns those guidelines into an explicit,
+deterministic decision function:
+
+    stats  = collect_stats(A, B, M, ...)      # cheap structural statistics
+    plan   = decide(stats)                    # pure: stats -> Plan
+    result = masked_spgemm(A, B, M)           # algorithm="auto" runs both
+
+``plan()`` memoizes Plans in an LRU cache keyed on a structural signature
+(shapes + nnz + CRC of the index arrays), so repeated shapes — the serving /
+batched case — skip re-planning entirely.  ``decide`` ranks algorithms with
+the per-algorithm cost hooks exported by ``accumulators.py``; the hooks
+model THIS vectorized implementation (padded-width products, sequential
+``fori_loop`` rounds, vmapped dots), which is what actually executes, rather
+than the paper's scalar CPU cost model.  The regime structure is the same as
+the paper's:
+
+  * Inner wins when the mask is sparser than the (padded) product — one
+    vmapped dot per mask nonzero beats any push-style flop loop.
+  * MCA wins when the mask is much denser than the inputs (compressed
+    accumulator, log-factor merges).
+  * MSA wins for complemented masks (dense states; hash/MCA/inner cannot
+    complement per Sec. 8.4) and small n; Heap takes over for extremely
+    sparse inputs when n is too large for MSA's dense state init.
+
+A sampled symbolic probe estimates flops and the compression ratio
+(flops / nnz(output)); it feeds the Plan's tile-path eligibility (dense
+block occupancy makes the Pallas ``masked_matmul`` / ``block_spgemm``
+kernels profitable) and is recorded for benchmark diagnostics.
+
+When the model ranks two candidates within ``TRIAL_RATIO`` of each other
+the tie is resolved empirically: ``plan()`` times the contenders once on
+the real operands and caches the winner (autotuning; the cost model cannot
+distinguish near-ties reliably across machine/load conditions).  The pure
+``decide`` path never measures — only ``plan`` does, and only on a cache
+miss for large non-complemented problems.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import zlib
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import accumulators as acc
+from .formats import CSR, PaddedCSR
+from .semiring import Semiring, PLUS_TIMES
+
+#: candidate algorithms, in cost-hook order
+CANDIDATES = tuple(acc.COST_HOOKS)
+
+#: rows sampled by the symbolic probe
+PROBE_ROWS = 64
+#: per-row flop budget above which the probe falls back to upper bounds
+PROBE_FLOP_CAP = 1 << 16
+
+#: candidates whose modeled cost is within this factor of the best are
+#: resolved by a one-shot measured trial on the real operands (the model
+#: cannot distinguish near-ties reliably across load/cache conditions;
+#: measuring once and caching the winner can)
+TRIAL_RATIO = 1.25
+#: at most this many candidates enter a trial
+TRIAL_MAX_CANDIDATES = 3
+#: timed repetitions per trial candidate (plus one warmup/compile call);
+#: the minimum is kept (robust to additive noise)
+TRIAL_ITERS = 3
+#: problems smaller than this are too fast for a meaningful trial (and any
+#: choice is fine); the modeled ranking is used directly
+TRIAL_MIN_ROWS = 256
+
+#: minimum input density for the Pallas tile path: dense (bs x bs) tiles
+#: compute bs^3 flops regardless of occupancy, so sparse operands would be
+#: mostly padding
+TILE_MIN_DENSITY = 0.02
+#: minimum expected nonzeros per (bs x bs) tile for a block size to be
+#: worth scheduling
+TILE_MIN_OCCUPANCY = 2.0
+#: block sizes the tile path will consider, largest first (MXU-aligned on
+#: TPU; interpret mode on CPU accepts any of these)
+TILE_BLOCK_SIZES = (128, 32, 8)
+#: minimum fraction of mask nonzeros the symbolic probe must see hit by
+#: the product for the tile path to stay eligible
+TILE_MIN_HIT_RATE = 0.05
+
+
+# ---------------------------------------------------------------------------
+# Statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStats:
+    """Cheap structural statistics driving the decision function.
+
+    Widths are the padded row widths the vmapped row kernels will actually
+    execute (``wa``/``wb`` = max row nnz of A/B, ``wbt`` = max *column* nnz
+    of B = row width of B^T for Inner, ``pm`` = max mask-row nnz).
+    ``flops`` / ``out_nnz`` come from the sampled symbolic probe, scaled to
+    the full matrix; ``compression`` is their ratio (paper Sec. 7).
+    """
+
+    m: int
+    k: int
+    n: int
+    nnz_a: int
+    nnz_b: int
+    nnz_m: int
+    wa: int
+    wb: int
+    wbt: int
+    pm: int
+    complement: bool
+    semiring: str = "plus_times"
+    flops: float = 0.0
+    out_nnz: float = 0.0
+    #: False when B is device-resident row-major (PaddedCSR): Inner needs
+    #: B^T and a padded B cannot be transposed without a host round-trip,
+    #: so it must not be auto-selected (the driver would misread B as B^T)
+    b_transposable: bool = True
+
+    @property
+    def compression(self) -> float:
+        return self.flops / max(1.0, self.out_nnz)
+
+    @property
+    def mask_density(self) -> float:
+        return self.nnz_m / max(1, self.m * self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Executable decision: which kernel, with which static parameters."""
+
+    algorithm: str
+    widths: Tuple[int, int, int]  # (wa, wb_or_wbt, wm) pad widths
+    two_phase: bool
+    n_inspect: Optional[int]
+    tile_eligible: bool
+    tile_block: int               # suggested BCSR block size (0 = n/a)
+    costs: Tuple[Tuple[str, float], ...]
+    stats: PlanStats
+    trialed: Tuple[str, ...] = ()  # candidates resolved by measured trial
+
+    def cost(self, algorithm: str) -> float:
+        return dict(self.costs)[algorithm]
+
+
+def _max_row_nnz(x: CSR) -> int:
+    return max(1, int(np.diff(x.indptr).max(initial=0)))
+
+
+def _max_col_nnz(x: CSR) -> int:
+    if x.nnz == 0:
+        return 1
+    return max(1, int(np.bincount(x.indices, minlength=x.shape[1]).max()))
+
+
+def _probe_rows(m: int, sample: int) -> np.ndarray:
+    if m <= sample:
+        return np.arange(m)
+    return np.unique(np.linspace(0, m - 1, sample).astype(np.int64))
+
+
+def symbolic_probe(A: CSR, B: CSR, M: CSR, *, complement: bool = False,
+                   sample: int = PROBE_ROWS) -> Tuple[float, float]:
+    """Sampled symbolic pass: (est. flops, est. nnz of the masked output).
+
+    Walks ``sample`` evenly spaced rows; for each, flops_i is the exact
+    Gustavson flop count and out_i the exact masked output nnz (union of the
+    touched B rows intersected with — or minus, under complement — the mask
+    row).  Rows whose flop count exceeds ``PROBE_FLOP_CAP`` fall back to the
+    mask-row upper bound instead of materializing the union.
+    """
+    m, n = M.shape
+    rows = _probe_rows(m, sample)
+    b_nnz = B.row_nnz()
+    flops = 0.0
+    out = 0.0
+    for i in rows:
+        a_cols, _ = A.row(int(i))
+        f_i = float(b_nnz[a_cols].sum()) if len(a_cols) else 0.0
+        flops += f_i
+        m_cols, _ = M.row(int(i))
+        if f_i == 0.0:
+            continue
+        if f_i > PROBE_FLOP_CAP:
+            out += float(n - len(m_cols)) if complement else float(len(m_cols))
+            continue
+        touched = np.unique(np.concatenate(
+            [B.indices[B.indptr[j]: B.indptr[j + 1]] for j in a_cols]))
+        if complement:
+            out += float(len(touched) - np.isin(touched, m_cols).sum())
+        else:
+            out += float(np.isin(m_cols, touched).sum())
+    scale = m / max(1, len(rows))
+    return flops * scale, out * scale
+
+
+def collect_stats(A: CSR, B: CSR, M: CSR, *, complement: bool = False,
+                  semiring: Semiring = PLUS_TIMES,
+                  probe: bool = True) -> PlanStats:
+    """Gather the planner's statistics from host CSR operands."""
+    m, k = A.shape
+    _, n = B.shape
+    flops, out_nnz = (symbolic_probe(A, B, M, complement=complement)
+                      if probe else (0.0, 0.0))
+    return PlanStats(
+        m=m, k=k, n=n, nnz_a=A.nnz, nnz_b=B.nnz, nnz_m=M.nnz,
+        wa=_max_row_nnz(A), wb=_max_row_nnz(B), wbt=_max_col_nnz(B),
+        pm=_max_row_nnz(M), complement=complement, semiring=semiring.name,
+        flops=flops, out_nnz=out_nnz)
+
+
+# ---------------------------------------------------------------------------
+# Decision function (pure, deterministic, testable)
+# ---------------------------------------------------------------------------
+
+
+def rank_algorithms(stats: PlanStats) -> Tuple[Tuple[str, float], ...]:
+    """Per-algorithm cost estimates (ms for the whole product), cheapest
+    first.  Pure function of ``stats``."""
+    candidates = [a for a in CANDIDATES
+                  if not stats.complement or a in acc.SUPPORTS_COMPLEMENT]
+    if not stats.b_transposable:
+        candidates = [a for a in candidates if a != "inner"]
+    scale = stats.m / 1024.0
+    costs = []
+    for name in candidates:
+        per_row = acc.COST_HOOKS[name](
+            n=stats.n, wa=stats.wa, wb=stats.wb, wbt=stats.wbt, pm=stats.pm)
+        costs.append((name, per_row * scale))
+    return tuple(sorted(costs, key=lambda kv: (kv[1], kv[0])))
+
+
+def _tile_path(stats: PlanStats) -> Tuple[bool, int]:
+    """Eligibility of the Pallas tile kernels (masked_matmul/block_spgemm).
+
+    Requires the plus_times semiring and an explicit mask (the tile kernels
+    accumulate with a dense MXU dot), MXU-alignable dims, and enough expected
+    nonzeros per tile that dense blocks are not mostly padding.
+    """
+    from repro.kernels.masked_matmul.ops import tile_path_supported
+    if not tile_path_supported(stats.semiring, stats.complement):
+        return False, 0
+    dens_a = stats.nnz_a / max(1, stats.m * stats.k)
+    dens_b = stats.nnz_b / max(1, stats.k * stats.n)
+    if min(dens_a, dens_b) < TILE_MIN_DENSITY:
+        return False, 0
+    # symbolic-probe gate: a mask that almost never hits the product makes
+    # dense output tiles pointless (most scheduled tiles would be zero)
+    if stats.flops > 0 and stats.out_nnz < TILE_MIN_HIT_RATE * stats.nnz_m:
+        return False, 0
+    for bs in TILE_BLOCK_SIZES:
+        if stats.m % bs or stats.n % bs or stats.k % bs:
+            continue
+        occ = min(dens_a, dens_b) * bs * bs
+        if occ >= TILE_MIN_OCCUPANCY:
+            return True, bs
+    return False, 0
+
+
+def decide(stats: PlanStats) -> Plan:
+    """Pure decision function: statistics -> Plan (paper Sec. 7-8 encoded in
+    the accumulator cost hooks)."""
+    costs = rank_algorithms(stats)
+    algorithm = costs[0][0]
+    wb = stats.wbt if algorithm == "inner" else stats.wb
+    tile_eligible, tile_block = _tile_path(stats)
+    return Plan(
+        algorithm=algorithm,
+        widths=(stats.wa, wb, stats.pm),
+        two_phase=False,           # 1P: the mask bounds the allocation
+        n_inspect=None,            # per-algorithm default
+        tile_eligible=tile_eligible,
+        tile_block=tile_block,
+        costs=costs,
+        stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Measured trial: resolve modeled near-ties empirically (cached with the plan)
+# ---------------------------------------------------------------------------
+
+
+def _trial_candidates(p: Plan) -> Tuple[str, ...]:
+    best_cost = p.costs[0][1]
+    cand = tuple(name for name, c in p.costs[:TRIAL_MAX_CANDIDATES]
+                 if c <= best_cost * TRIAL_RATIO)
+    return cand if len(cand) >= 2 else ()
+
+
+#: measured-trial winners memoized by coarse shape class, so iterative
+#: algorithms (k-truss, BC) whose operand structure drifts every iteration
+#: pay for at most one trial per shape class, not one per iteration
+_trial_winners: Dict[tuple, str] = {}
+_TRIAL_MEMO_CAPACITY = 256
+
+
+def _shape_class(s: PlanStats) -> tuple:
+    b = int.bit_length  # log2 buckets: widths within 2x share a class
+    return (s.m, s.k, s.n, b(s.wa), b(s.wb), b(s.wbt), b(s.pm),
+            s.semiring, s.complement)
+
+
+def _refine_with_trial(A: CSR, B: CSR, M: CSR, p: Plan,
+                       semiring: Semiring) -> Plan:
+    """Time the near-tied candidates once on the real operands and keep the
+    winner.  Plans are cached by structure, so the trial is a one-time cost
+    amortized over every later call with the same shapes (the serving
+    case); clearly-ranked plans never pay it."""
+    import time
+    from .masked_spgemm import masked_spgemm  # deferred: no import cycle
+
+    cand = _trial_candidates(p)
+    if not cand:
+        return p
+    s = p.stats
+    memo_key = _shape_class(s)
+    with _cache_lock:
+        winner = _trial_winners.get(memo_key)
+    if winner is not None and winner in cand:
+        wb = s.wbt if winner == "inner" else s.wb
+        return dataclasses.replace(p, algorithm=winner,
+                                   widths=(s.wa, wb, s.pm), trialed=cand)
+
+    def make(name):
+        widths = (s.wa, s.wbt if name == "inner" else s.wb, s.pm)
+
+        def call():
+            out = masked_spgemm(A, B, M, algorithm=name, semiring=semiring,
+                                widths=widths)
+            out.vals.block_until_ready()
+
+        return call
+
+    calls = {name: make(name) for name in cand}
+    for call in calls.values():        # compile + warm
+        call()
+    # interleaved rounds, min per candidate: drift in machine conditions
+    # during the trial hits every candidate alike
+    timed = {name: float("inf") for name in cand}
+    for _ in range(TRIAL_ITERS):
+        for name, call in calls.items():
+            t0 = time.perf_counter()
+            call()
+            timed[name] = min(timed[name], time.perf_counter() - t0)
+    winner = min(timed, key=timed.get)
+    with _cache_lock:
+        if len(_trial_winners) >= _TRIAL_MEMO_CAPACITY:
+            _trial_winners.clear()
+        _trial_winners[memo_key] = winner
+    wb = s.wbt if winner == "inner" else s.wb
+    return dataclasses.replace(p, algorithm=winner,
+                               widths=(s.wa, wb, s.pm), trialed=cand)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (structural-signature LRU)
+# ---------------------------------------------------------------------------
+
+_CACHE_CAPACITY = 128
+_cache: "OrderedDict[tuple, Plan]" = OrderedDict()
+_cache_lock = threading.Lock()
+_cache_hits = 0
+_cache_misses = 0
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def structure_signature(x) -> tuple:
+    """Structural identity of an operand: equal signatures => equal sparsity
+    structure (up to CRC collision), values ignored."""
+    if isinstance(x, CSR):
+        return ("csr", x.shape, x.nnz, _crc(x.indptr), _crc(x.indices))
+    if isinstance(x, PaddedCSR):
+        # device-resident: identify by the host-visible static structure
+        # only (no device sync); callers wanting exact reuse pass a Plan
+        return ("padded", x.shape, x.width)
+    raise TypeError(f"unsupported operand type {type(x)!r}")
+
+
+def plan_cache_info() -> Dict[str, int]:
+    with _cache_lock:
+        return {"hits": _cache_hits, "misses": _cache_misses,
+                "size": len(_cache), "capacity": _CACHE_CAPACITY}
+
+
+def clear_plan_cache() -> None:
+    global _cache_hits, _cache_misses
+    with _cache_lock:
+        _cache.clear()
+        _trial_winners.clear()
+        _cache_hits = 0
+        _cache_misses = 0
+
+
+def _cache_get(key) -> Optional[Plan]:
+    global _cache_hits
+    with _cache_lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _cache.move_to_end(key)
+            _cache_hits += 1
+        return hit
+
+
+def _cache_put(key, p: Plan) -> None:
+    global _cache_misses
+    with _cache_lock:
+        _cache_misses += 1
+        _cache[key] = p
+        if len(_cache) > _CACHE_CAPACITY:
+            _cache.popitem(last=False)
+
+
+def plan(A, B, M, *, complement: bool = False,
+         semiring: Semiring = PLUS_TIMES, use_cache: bool = True) -> Plan:
+    """Plan C = M (.) (A B): cached decision on structural signatures.
+
+    ``A``/``B``/``M`` are host ``CSR`` (the common entry); ``PaddedCSR``
+    operands are planned from their static widths without a probe.
+    """
+    key = None
+    if use_cache:
+        key = (structure_signature(A), structure_signature(B),
+               structure_signature(M), complement, semiring.name)
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
+
+    if isinstance(A, CSR) and isinstance(B, CSR) and isinstance(M, CSR):
+        stats = collect_stats(A, B, M, complement=complement,
+                              semiring=semiring)
+    else:  # device-resident operands: widths are already static
+        m, k = A.shape
+        _, n = B.shape
+        stats = PlanStats(
+            m=m, k=k, n=n,
+            nnz_a=m * A.width if isinstance(A, PaddedCSR) else A.nnz,
+            nnz_b=B.shape[0] * B.width if isinstance(B, PaddedCSR) else B.nnz,
+            nnz_m=m * M.width if isinstance(M, PaddedCSR) else M.nnz,
+            wa=A.width if isinstance(A, PaddedCSR) else _max_row_nnz(A),
+            wb=B.width if isinstance(B, PaddedCSR) else _max_row_nnz(B),
+            wbt=B.width if isinstance(B, PaddedCSR) else _max_col_nnz(B),
+            pm=M.width if isinstance(M, PaddedCSR) else _max_row_nnz(M),
+            complement=complement, semiring=semiring.name,
+            b_transposable=not isinstance(B, PaddedCSR))
+    p = decide(stats)
+    if (not complement and stats.m >= TRIAL_MIN_ROWS
+            and isinstance(A, CSR) and isinstance(B, CSR)
+            and isinstance(M, CSR)):
+        p = _refine_with_trial(A, B, M, p, semiring)
+
+    if use_cache:
+        _cache_put(key, p)
+    return p
+
+
+def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
+               complement: bool = False,
+               semiring: Semiring = PLUS_TIMES) -> Plan:
+    """One Plan for a batch of same-shape operands sharing B.
+
+    Statistics come from the first (A, M) pair; pad widths are widened to
+    the batch maxima so a single compiled program fits every element.  The
+    cache key covers the whole batch's structure.
+    """
+    if not As or len(As) != len(Ms):
+        raise ValueError("batch needs equal-length non-empty As/Ms")
+    key = (tuple(structure_signature(a) for a in As),
+           structure_signature(B),
+           tuple(structure_signature(m) for m in Ms),
+           complement, semiring.name, "batch")
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+
+    def width(x):
+        return x.width if isinstance(x, PaddedCSR) else _max_row_nnz(x)
+
+    if (isinstance(As[0], CSR) and isinstance(B, CSR)
+            and isinstance(Ms[0], CSR)):
+        stats = collect_stats(As[0], B, Ms[0], complement=complement,
+                              semiring=semiring)
+    else:
+        m, k = As[0].shape
+        _, n = B.shape
+        stats = PlanStats(
+            m=m, k=k, n=n, nnz_a=m * width(As[0]),
+            nnz_b=B.shape[0] * width(B), nnz_m=m * width(Ms[0]),
+            wa=width(As[0]), wb=width(B),
+            wbt=width(B) if isinstance(B, PaddedCSR) else _max_col_nnz(B),
+            pm=width(Ms[0]), complement=complement, semiring=semiring.name)
+    stats = dataclasses.replace(
+        stats, wa=max(width(a) for a in As), pm=max(width(m) for m in Ms),
+        b_transposable=not isinstance(B, PaddedCSR))
+    p = decide(stats)
+
+    _cache_put(key, p)
+    return p

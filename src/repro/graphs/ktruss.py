@@ -17,7 +17,7 @@ from repro.core.masked_spgemm import masked_spgemm
 from repro.core.semiring import PLUS_TIMES
 
 
-def ktruss(adj: CSR, k: int, *, algorithm: str = "msa",
+def ktruss(adj: CSR, k: int, *, algorithm: str = "auto",
            two_phase: bool = False, max_iter: int = 100
            ) -> Tuple[CSR, float, int, int]:
     """Returns (truss_adjacency, masked_spgemm_seconds, iterations, flops).

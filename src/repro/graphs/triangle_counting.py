@@ -31,7 +31,7 @@ def degree_relabel(a: CSR) -> CSR:
     return csr_from_coo(rows, cols, a.data, a.shape, sum_dups=False)
 
 
-def triangle_count(adj: CSR, *, algorithm: str = "msa",
+def triangle_count(adj: CSR, *, algorithm: str = "auto",
                    relabel: bool = True, two_phase: bool = False,
                    widths=None) -> Tuple[int, float]:
     """Returns (#triangles, masked-spgemm seconds).

@@ -28,6 +28,18 @@ def on_tpu() -> bool:
     return _ON_TPU
 
 
+def tile_path_supported(semiring_name: str, complement: bool) -> bool:
+    """Whether the Pallas tile kernels can express this product.
+
+    Both kernels accumulate with a dense MXU dot, so only the plus_times
+    semiring is representable, and the mask must be explicit (a complement's
+    output is not bounded by the mask's block structure).  The planner
+    (``repro.core.planner``) consults this plus an occupancy estimate to set
+    ``Plan.tile_eligible``.
+    """
+    return semiring_name == "plus_times" and not complement
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "interpret"))
 def masked_matmul(a, b, bi, bj, *, bm, bn, bk, interpret=None):
@@ -109,3 +121,18 @@ def block_spgemm(A: BCSR, B: BCSR, M: BCSR, *, interpret=None) -> BCSR:
         nnzb_out=M.nnzb, bs=bs, interpret=interpret)
     return BCSR(M.indptr.copy(), M.indices.copy(), blocks,
                 (M.shape[0], B.shape[1]), bs)
+
+
+def block_spgemm_from_csr(A, B, M, *, block_size: int,
+                          interpret=None) -> BCSR:
+    """Tile path from host CSR operands (the ``Plan.tile_eligible`` route).
+
+    Densifies per tile via ``bcsr_from_dense`` — callers should only take
+    this route when the planner's occupancy estimate says dense tiles pay
+    off (``Plan.tile_block`` gives the block size it checked).
+    """
+    from repro.core.formats import bcsr_from_dense
+    Ab = bcsr_from_dense(A.to_dense(), block_size)
+    Bb = bcsr_from_dense(B.to_dense(), block_size)
+    Mb = bcsr_from_dense(M.to_dense(), block_size)
+    return block_spgemm(Ab, Bb, Mb, interpret=interpret)

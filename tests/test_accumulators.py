@@ -6,7 +6,10 @@ complemented masks (MSA, Heap), 1P/2P, mask-aligned stability.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st, HealthCheck
+try:
+    from hypothesis import given, settings, strategies as st, HealthCheck
+except ImportError:  # container has no hypothesis; deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st, HealthCheck
 
 from repro.core.formats import csr_from_dense, padded_from_csr
 from repro.core.masked_spgemm import masked_spgemm, dense_oracle, ALGORITHMS

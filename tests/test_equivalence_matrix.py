@@ -1,0 +1,53 @@
+"""Cross-algorithm equivalence matrix vs the dense oracle.
+
+Every entry of ALGORITHMS x {plus_times, min_plus, boolean} x {masked,
+complemented} is checked against ``dense_oracle``; the combinations the
+paper documents as unsupported (hash/MCA/inner + complement, Sec. 8.4) are
+covered with explicit ``pytest.raises(NotImplementedError)``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.masked_spgemm import ALGORITHMS
+from repro.core.semiring import MIN_PLUS, OR_AND, PLUS_TIMES
+
+from test_accumulators import check, make_problem
+
+SEMIRINGS = {"plus_times": PLUS_TIMES, "min_plus": MIN_PLUS,
+             "boolean": OR_AND}
+
+#: algorithms whose row kernels reject complement (paper Sec. 8.4)
+NO_COMPLEMENT = ("hash", "mca", "inner")
+
+
+def matrix_problem(semiring_name):
+    A, B, M = make_problem(41, 13, 11, 12, 0.3, 0.3, 0.4)
+    if semiring_name == "boolean":
+        A = (A > 0).astype(np.float32)
+        B = (B > 0).astype(np.float32)
+    return A, B, M
+
+
+@pytest.mark.parametrize("semiring", sorted(SEMIRINGS))
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_masked(algorithm, semiring):
+    A, B, M = matrix_problem(semiring)
+    check(algorithm, A, B, M, semiring=SEMIRINGS[semiring])
+
+
+@pytest.mark.parametrize("semiring", sorted(SEMIRINGS))
+@pytest.mark.parametrize(
+    "algorithm", [a for a in ALGORITHMS if a not in NO_COMPLEMENT])
+def test_complemented(algorithm, semiring):
+    A, B, M = matrix_problem(semiring)
+    check(algorithm, A, B, M, semiring=SEMIRINGS[semiring],
+          complement=True)
+
+
+@pytest.mark.parametrize("semiring", sorted(SEMIRINGS))
+@pytest.mark.parametrize("algorithm", NO_COMPLEMENT)
+def test_complement_unsupported_raises(algorithm, semiring):
+    A, B, M = matrix_problem(semiring)
+    with pytest.raises(NotImplementedError):
+        check(algorithm, A, B, M, semiring=SEMIRINGS[semiring],
+              complement=True)

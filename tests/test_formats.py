@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis; deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.formats import (
     CSR, csr_from_dense, csr_from_coo, padded_from_csr, padded_from_dense,

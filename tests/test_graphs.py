@@ -81,3 +81,16 @@ def test_triangle_on_rmat():
     want = sum(nx.triangles(g).values()) // 3
     got, _ = triangle_count(adj)
     assert got == want
+
+
+def test_betweenness_chunked_sources_matches_unchunked():
+    """source_chunks routes through masked_spgemm_batched (one plan per
+    depth); results must match the per-call path exactly."""
+    g = random_graph(9, n=22, p=0.25)
+    a = nx_to_csr(g)
+    srcs = [0, 2, 4, 7, 11]
+    want, _, _ = betweenness_centrality(a, sources=srcs, algorithm="msa")
+    got, _, calls = betweenness_centrality(a, sources=srcs, algorithm="msa",
+                                           source_chunks=2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert calls > 0

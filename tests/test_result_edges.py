@@ -1,0 +1,66 @@
+"""Edge-case regressions for MaskedSpGEMMResult and the 1P/2P drivers."""
+import numpy as np
+import pytest
+
+from repro.core.formats import csr_from_dense
+from repro.core.masked_spgemm import ALGORITHMS, dense_oracle, masked_spgemm
+
+from test_accumulators import check, make_problem
+
+
+def problem_with_edge_rows():
+    """Rows 0/1 exercise the degenerate cases: row 0 of M is empty (no
+    output slots at all); row 1 of A is empty but its mask row is not
+    (every slot allowed yet nothing lands)."""
+    A, B, M = make_problem(77, 9, 8, 10, 0.4, 0.4, 0.5)
+    M[0, :] = 0.0           # empty mask row
+    A[1, :] = 0.0           # all-masked-out row (mask allows, A empty)
+    M[1, :] = 1.0
+    return A, B, M
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_edge_rows_match_oracle(algorithm):
+    A, B, M = problem_with_edge_rows()
+    check(algorithm, A, B, M)
+
+
+def test_empty_mask_row_yields_no_slots():
+    A, B, M = problem_with_edge_rows()
+    out = masked_spgemm(csr_from_dense(A), csr_from_dense(B),
+                        csr_from_dense(M), algorithm="msa")
+    present = np.asarray(out.present)
+    cols = np.asarray(out.mask_cols)
+    n = out.shape[1]
+    assert not present[0].any()
+    assert (cols[0] == n).all()          # row 0: every slot is padding
+    assert not present[1].any()          # row 1: allowed but nothing lands
+    assert (np.asarray(out.to_dense())[:2] == 0).all()
+
+
+def test_to_csr_roundtrip_is_duplicate_free():
+    A, B, M = problem_with_edge_rows()
+    out = masked_spgemm(csr_from_dense(A), csr_from_dense(B),
+                        csr_from_dense(M), algorithm="mca")
+    c = out.to_csr()
+    # no duplicate (row, col) pairs survive the conversion
+    rows = np.repeat(np.arange(c.shape[0]), np.diff(c.indptr))
+    keys = rows * c.shape[1] + c.indices
+    assert len(np.unique(keys)) == len(keys)
+    np.testing.assert_allclose(c.to_dense(), np.asarray(out.to_dense()),
+                               rtol=1e-6)
+    assert c.nnz == int(out.nnz)
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_two_phase_bitwise_equals_one_phase(algorithm):
+    A, B, M = make_problem(78, 10, 12, 14, 0.25, 0.25, 0.3)
+    args = (csr_from_dense(A), csr_from_dense(B), csr_from_dense(M))
+    one = masked_spgemm(*args, algorithm=algorithm, two_phase=False)
+    two = masked_spgemm(*args, algorithm=algorithm, two_phase=True)
+    # the symbolic pass must not perturb the numeric pass at all
+    np.testing.assert_array_equal(np.asarray(one.vals), np.asarray(two.vals))
+    np.testing.assert_array_equal(np.asarray(one.present),
+                                  np.asarray(two.present))
+    np.testing.assert_array_equal(np.asarray(one.mask_cols),
+                                  np.asarray(two.mask_cols))

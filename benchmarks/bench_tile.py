@@ -1,0 +1,141 @@
+"""Tile-route validation grid: block size x input density x mask occupancy.
+
+Times the end-to-end BCSR tile route (``masked_spgemm(algorithm="tile")`` —
+conversion + vectorized schedule + both executor replays + extraction)
+against every row kernel on two families:
+
+* block-structured operands (whole tiles on/off, dense within a tile) at
+  several tile densities and mask tile occupancies — the regime the tile
+  path exists for (attention/SSD-style masks switch MXU tiles wholesale);
+* a uniform-ER control point per block size, where the row kernels must
+  keep winning and the planner must not elect the tile route.
+
+Acceptance (recorded in tile_grid.json):
+  * ``_tile_wins_somewhere`` — the tile route beats the best row kernel on
+    at least one dense-block point;
+  * ``_planner_ok`` — at every point where auto elected the tile route it
+    is within ``PICK_TOLERANCE`` of the best row kernel (the planner never
+    picks tile where it loses by >10%).
+Re-tune ``planner.TILE_COST`` / ``TILE_MIN_*`` against this grid (see
+ROADMAP "Open items").
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.formats import csr_from_dense, erdos_renyi
+from repro.core.masked_spgemm import ALGORITHMS, masked_spgemm
+from repro.core.planner import clear_plan_cache, plan
+from .bench_density import er_mask
+from .common import save, timeit
+
+#: a point where auto elected "tile" fails if tile is slower than
+#: (1 + this) x the best row kernel
+PICK_TOLERANCE = 0.10
+
+
+def block_sparse(n, bs, tile_density, within_density, seed, mask=False):
+    """Block-structured sparse matrix: tiles occupied w.p. ``tile_density``,
+    elements inside an occupied tile w.p. ``within_density``."""
+    rng = np.random.default_rng(seed)
+    nb = n // bs
+    tiles = rng.random((nb, nb)) < tile_density
+    if not tiles.any():
+        tiles[0, 0] = True
+    dense = np.kron(tiles, np.ones((bs, bs))) * (rng.random((n, n))
+                                                 < within_density)
+    if mask:
+        return dense.astype(np.float32)
+    return (dense * rng.integers(1, 5, (n, n))).astype(np.float32)
+
+
+def _time_point(A, B, M, bs, iters):
+    times = {}
+    for algo in ALGORITHMS:
+        def go(algo=algo):
+            out = masked_spgemm(A, B, M, algorithm=algo)
+            out.vals.block_until_ready()
+        times[algo] = timeit(go, iters=iters)
+
+    def go_tile():
+        out = masked_spgemm(A, B, M, algorithm="tile", tile_block=bs)
+        out.vals.block_until_ready()
+    t_tile = timeit(go_tile, iters=iters)
+
+    p = plan(A, B, M)   # may pay a one-shot trial; timed auto call is warm
+
+    def go_auto():
+        out = masked_spgemm(A, B, M, algorithm="auto")
+        out.vals.block_until_ready()
+    t_auto = timeit(go_auto, iters=iters)
+    return times, t_tile, t_auto, p
+
+
+def run(n: int = 512, block_sizes=(8, 32), tile_densities=(0.1, 0.3),
+        mask_occupancies=(0.2, 0.6), iters: int = 3):
+    clear_plan_cache()
+    table = {}
+    tile_wins = False
+    planner_ok = True
+    for bs in block_sizes:
+        points = [
+            (f"bs{bs}_td{td}_mo{mo}",
+             block_sparse(n, bs, td, 0.9, seed=100 + bs, mask=False),
+             block_sparse(n, bs, td, 0.9, seed=200 + bs, mask=False),
+             block_sparse(n, bs, mo, 1.0, seed=300 + int(mo * 10), mask=True))
+            for td in tile_densities for mo in mask_occupancies
+        ]
+        # uniform-sparse control: the tile route must lose AND not be picked
+        g = erdos_renyi(n, 4, seed=bs)
+        points.append((f"bs{bs}_er_control", g.to_dense(),
+                       erdos_renyi(n, 4, seed=bs + 1).to_dense(),
+                       er_mask(n, 8, seed=bs + 2).to_dense()))
+        for name, A, B, M in points:
+            Ac, Bc, Mc = (csr_from_dense(np.asarray(A)),
+                          csr_from_dense(np.asarray(B)),
+                          csr_from_dense(np.asarray(M)))
+            times, t_tile, t_auto, p = _time_point(Ac, Bc, Mc, bs, iters)
+            best_row = min(times, key=times.get)
+            beats = t_tile < times[best_row]
+            control = name.endswith("_control")
+            if beats and not control:
+                tile_wins = True
+            point_ok = (p.algorithm != "tile"
+                        or t_tile <= (1 + PICK_TOLERANCE) * times[best_row])
+            planner_ok &= point_ok
+            table[name] = {
+                "row_times": times, "tile": t_tile, "auto": t_auto,
+                "chosen": p.algorithm, "tile_eligible": p.tile_eligible,
+                "tile_block": p.tile_block, "best_row": best_row,
+                "tile_vs_best_row": t_tile / times[best_row],
+                "ok": point_ok,
+            }
+            print(f"[tile] {name:24s} tile={t_tile * 1e3:7.1f}ms "
+                  f"best_row={best_row:7s} {times[best_row] * 1e3:7.1f}ms "
+                  f"ratio={t_tile / times[best_row]:5.2f} "
+                  f"chosen={p.algorithm:7s} "
+                  f"{'OK' if point_ok else 'MISS'}", flush=True)
+    table["_tile_wins_somewhere"] = tile_wins
+    table["_planner_ok"] = planner_ok
+    print(f"[tile] tile_wins_somewhere={tile_wins} planner_ok={planner_ok}",
+          flush=True)
+    save("tile_grid", table)
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + 1 iteration (CI smoke job)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n=128, block_sizes=(8, 16), tile_densities=(0.3,),
+            mask_occupancies=(0.5,), iters=1)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,8 @@ import argparse
 import time
 import traceback
 
-ORDER = ("density", "planner", "triangle", "rmat", "scaling", "ktruss",
-         "bc", "block")
+ORDER = ("density", "planner", "tile", "triangle", "rmat", "scaling",
+         "ktruss", "bc", "block")
 
 
 def main() -> None:
@@ -28,15 +28,19 @@ def main() -> None:
 
     from . import (bench_bc, bench_block_kernel, bench_density,
                    bench_ktruss, bench_planner, bench_rmat_scale,
-                   bench_scaling, bench_triangle)
+                   bench_scaling, bench_tile, bench_triangle)
     if args.smoke:
         density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
                           iters=3)
+        tile_kw = dict(n=128, block_sizes=(8, 16), tile_densities=(0.3,),
+                       mask_occupancies=(0.5,), iters=1)
     else:
         density_kw = dict(n=2048 if args.full else 1024)
+        tile_kw = dict(n=512)
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
         "planner": lambda: bench_planner.run(**density_kw),
+        "tile": lambda: bench_tile.run(**tile_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

@@ -1,0 +1,76 @@
+"""Version portability shims for the jax API surface this repo uses.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``); older jaxlib builds (<= 0.4.x, like the
+pinned container toolchain) expose the same functionality under
+``jax.experimental.shard_map`` (with ``check_rep``) and via ``Mesh`` as a
+context manager.  Importing through this module keeps every call site
+version-agnostic:
+
+    from repro.compat import shard_map, set_mesh
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with per-shard semantics checking disabled.
+
+    On new jax this is ``jax.shard_map(..., check_vma=False)``; on old jax,
+    ``jax.experimental.shard_map.shard_map(..., check_rep=False)``.  The
+    check is disabled in both because the collectives in this repo
+    (ppermute rings, psum trees) are hand-scheduled and the checker's
+    replication inference rejects some valid programs.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
+def axis_size(axis_name):
+    """Size of a named mesh axis inside shard_map.
+
+    Old jax has no ``jax.lax.axis_size``; ``psum(1, axis)`` is the classic
+    spelling and folds to a constant for a known mesh.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None.
+
+    Old jax tracks the global mesh (installed by ``with mesh:``) on
+    ``pxla.thread_resources`` instead of ``jax.sharding``.  Without this
+    fallback, mesh-sniffing callers (e.g. the expert-parallel MoE switch)
+    silently saw "no mesh" and degraded to their dense paths.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New jax: ``jax.set_mesh``.  Old jax: ``Mesh`` itself is the context
+    manager (the classic global-mesh idiom).
+    """
+    if hasattr(jax, "set_mesh"):
+        ctx = jax.set_mesh(mesh)
+        # jax.set_mesh is itself a context manager on current jax
+        with ctx:
+            yield mesh
+        return
+    with mesh:
+        yield mesh

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .formats import CSR, PaddedCSR, padded_from_csr
 from .masked_spgemm import _row_fn
 from .semiring import Semiring, PLUS_TIMES
@@ -58,10 +60,10 @@ def row_parallel_masked_spgemm(A: PaddedCSR, B: PaddedCSR, M: PaddedCSR,
                      row(mcr, acr, avr, alr, Bc, Bv, Bl))
         return f(mc, ac, av, al)
 
-    shard = jax.shard_map(
+    shard = shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec, spec, P(), P(), P()),
-        out_specs=(spec, spec), check_vma=False,
+        out_specs=(spec, spec),
     )
     return shard(M.cols, A.cols, A.vals, A.lens, B.cols, B.vals, B.lens)
 
@@ -76,9 +78,18 @@ def ring_masked_matmul(a, b, mask, mesh: Mesh, *, axis: str = "data",
     """C = mask (.) (A B) with A row-sharded and B K-sharded over ``axis``.
 
     a: (m, k) sharded P(axis, None); b: (k, n) sharded P(axis, None);
-    mask: (m, n) {0,1} sharded P(axis, None) — tile-granular skipping is
-    applied by zeroing mask-disallowed output tiles per stage; the HLO
-    contains exactly nsteps collective-permutes of one B panel each.
+    mask: (m, n) {0,1} sharded P(axis, None).
+
+    Tile-granular skipping, per stage: each shard computes its mask's
+    block-level occupancy once (any nonzero per ``block x block`` tile);
+    inside every ring stage the local product is issued per output column
+    panel, and panels whose tiles are all disallowed skip their MXU work
+    through ``lax.cond`` (the dot is never executed, every stage).  After
+    the loop, disallowed output tiles are zeroed at block granularity and
+    the element mask applied once.  The ppermute for stage s+1 is issued
+    *before* stage s's local compute so XLA's async collectives overlap
+    communication with the MXU work; the HLO contains exactly nsteps
+    collective-permutes of one B panel each.
 
     Returns (m, n) sharded P(axis, None).
     """
@@ -87,7 +98,20 @@ def ring_masked_matmul(a, b, mask, mesh: Mesh, *, axis: str = "data",
     def local(a_blk, b_blk, m_blk):
         # a_blk: (m/p, k); b_blk: (k/p, n); m_blk: (m/p, n)
         idx = jax.lax.axis_index(axis)
-        k_per = b_blk.shape[0]
+        k_per, n = b_blk.shape
+        m_loc = a_blk.shape[0]
+        tm, tn = min(block, m_loc), min(block, n)
+        pad_m, pad_n = -m_loc % tm, -n % tn
+        mp, np_ = m_loc + pad_m, n + pad_n
+        tiles_m, tiles_n = mp // tm, np_ // tn
+
+        # block-level occupancy of this shard's mask rows (computed once);
+        # padded columns/rows are zero -> their tiles are never scheduled
+        m_pad = jnp.pad(m_blk != 0, ((0, pad_m), (0, pad_n)))
+        occ = m_pad.reshape(tiles_m, tm, tiles_n, tn).any(axis=(1, 3))
+        col_needed = occ.any(axis=0)            # (tiles_n,)
+        a_pad = jnp.pad(a_blk, ((0, pad_m), (0, 0)))
+        b_pad = jnp.pad(b_blk, ((0, 0), (0, pad_n)))
 
         def stage(s, carry):
             acc, panel = carry
@@ -96,21 +120,36 @@ def ring_masked_matmul(a, b, mask, mesh: Mesh, *, axis: str = "data",
                 panel, axis,
                 [(i, (i + 1) % nsteps) for i in range(nsteps)])
             src = (idx - s) % nsteps          # whose panel we now hold
-            a_slice = jax.lax.dynamic_slice_in_dim(a_blk, src * k_per, k_per,
+            a_slice = jax.lax.dynamic_slice_in_dim(a_pad, src * k_per, k_per,
                                                    axis=1)
-            acc = acc + jnp.dot(a_slice, panel,
-                                preferred_element_type=jnp.float32,
-                                precision=precision)
+
+            def col_panel(tj, acc):
+                panel_j = jax.lax.dynamic_slice_in_dim(panel, tj * tn, tn,
+                                                       axis=1)
+                contrib = jax.lax.cond(
+                    col_needed[tj],
+                    lambda: jnp.dot(a_slice, panel_j,
+                                    preferred_element_type=jnp.float32,
+                                    precision=precision),
+                    lambda: jnp.zeros((mp, tn), jnp.float32))
+                cur = jax.lax.dynamic_slice_in_dim(acc, tj * tn, tn, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    acc, cur + contrib, tj * tn, axis=1)
+
+            acc = jax.lax.fori_loop(0, tiles_n, col_panel, acc)
             return acc, nxt
 
-        acc = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
-        acc, _ = jax.lax.fori_loop(0, nsteps, stage, (acc, b_blk))
+        acc = jnp.zeros((mp, np_), jnp.float32)
+        acc, _ = jax.lax.fori_loop(0, nsteps, stage, (acc, b_pad))
+        # zero disallowed tiles at block granularity, then the element mask
+        occ_elem = jnp.repeat(jnp.repeat(occ, tm, axis=0), tn, axis=1)
+        acc = jnp.where(occ_elem, acc, 0.0)[:m_loc, :n]
         return jnp.where(m_blk != 0, acc, 0.0).astype(a_blk.dtype)
 
-    shard = jax.shard_map(
+    shard = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None)),
-        out_specs=P(axis, None), check_vma=False,
+        out_specs=P(axis, None),
     )
     return shard(a, b, mask)
 

@@ -265,6 +265,77 @@ def bcsr_from_dense(a: np.ndarray, block_size: int, prune_zero: bool = True) -> 
     return BCSR(indptr, cols.astype(np.int64), jnp.asarray(blocks), (m, n), bs)
 
 
+def bcsr_from_csr(a: CSR, block_size: int, dtype=None) -> BCSR:
+    """Direct CSR -> BCSR: scatter entries into only the occupied blocks.
+
+    Never materializes the dense matrix — memory is O(nnzb * bs^2), bounded
+    by the input's block structure, which is what makes the tile path usable
+    at scales where an (m, n) densify would not fit.  Rows/cols beyond the
+    last full block are padded into partial edge blocks (zero filled), same
+    layout as ``bcsr_from_dense``.  Assumes ``a`` has no duplicate entries
+    (every ``csr_from_coo``-built CSR satisfies this).
+    """
+    bs = block_size
+    m, n = a.shape
+    mb, nb = -(-m // bs), -(-n // bs)
+    rows = _expand_rows(a.indptr)
+    cols = a.indices
+    key = (rows // bs) * nb + cols // bs
+    uniq, inv = np.unique(key, return_inverse=True)
+    blocks = np.zeros((len(uniq), bs, bs), dtype=a.data.dtype)
+    blocks[inv, rows % bs, cols % bs] = a.data
+    ubr, ubc = uniq // nb, uniq % nb
+    indptr = np.zeros(mb + 1, dtype=np.int64)
+    np.add.at(indptr, ubr + 1, 1)
+    dev = jnp.asarray(blocks) if dtype is None else jnp.asarray(blocks, dtype)
+    return BCSR(np.cumsum(indptr), ubc.astype(np.int64), dev, (m, n), bs)
+
+
+def bcsr_to_csr(a: BCSR, prune_zero: bool = True) -> CSR:
+    """Inverse of ``bcsr_from_csr``: element CSR of the stored blocks.
+
+    With ``prune_zero`` (default) only numerically nonzero elements are
+    kept — the result-extraction contract of the tile pipeline, where the
+    output's element structure is the nonzeros the masked product actually
+    produced.  Elements in the zero-padded edge region (beyond ``shape``)
+    are always dropped.
+    """
+    bs = a.block_size
+    m, n = a.shape
+    blocks = np.asarray(a.blocks)
+    brow = np.repeat(np.arange(a.block_rows, dtype=np.int64),
+                     np.diff(a.indptr))
+    if prune_zero:
+        p, r, c = np.nonzero(blocks)
+    else:
+        p, r, c = (x.ravel() for x in np.indices(blocks.shape))
+    rows = brow[p] * bs + r
+    cols = a.indices[p] * bs + c
+    keep = (rows < m) & (cols < n)
+    return csr_from_coo(rows[keep], cols[keep], blocks[p, r, c][keep],
+                        (m, n), sum_dups=False)
+
+
+def bcsr_block_positions(a: BCSR, bi: np.ndarray, bj: np.ndarray
+                         ) -> np.ndarray:
+    """Positions in ``a.blocks`` of blocks (bi[t], bj[t]); -1 when absent.
+
+    Relies on the BCSR invariant that blocks are stored in row-major
+    (block-row, block-col) order, so a single searchsorted resolves every
+    query.
+    """
+    nb = a.block_cols
+    brow = np.repeat(np.arange(a.block_rows, dtype=np.int64),
+                     np.diff(a.indptr))
+    keys = brow * nb + a.indices
+    q = np.asarray(bi, dtype=np.int64) * nb + np.asarray(bj, dtype=np.int64)
+    pos = np.searchsorted(keys, q)
+    pos_c = np.minimum(pos, max(0, len(keys) - 1))
+    ok = (pos < len(keys)) & (keys[pos_c] == q) if len(keys) else \
+        np.zeros(len(q), dtype=bool)
+    return np.where(ok, pos, -1)
+
+
 def bcsr_structure_transpose(a: BCSR) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Column-major view of the block structure: (indptr_T, rows_T, pos_T).
 

@@ -26,9 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import accumulators as acc
-from .formats import CSR, PaddedCSR, padded_from_csr, csr_from_coo
+from .formats import (CSR, PaddedCSR, padded_from_csr, csr_from_coo,
+                      bcsr_from_csr, bcsr_block_positions, _expand_rows)
 from .semiring import Semiring, PLUS_TIMES
 
+#: the vmapped row kernels; the BCSR tile route ("tile") dispatches through
+#: the Pallas/XLA block executors instead and is planner- or caller-elected
 ALGORITHMS = ("msa", "hash", "mca", "heap", "heapdot", "inner")
 
 
@@ -112,7 +115,7 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
                   semiring: Semiring = PLUS_TIMES, complement: bool = False,
                   two_phase: bool = False, n_inspect: Optional[int] = None,
                   widths: Optional[Tuple[int, int, int]] = None,
-                  plan=None):
+                  tile_block: Optional[int] = None, plan=None):
     """C = M (.) (A B)   [or  C = (not M) (.) (A B)].
 
     A, B, M: host CSR (or PaddedCSR already on device).  Returns a
@@ -123,8 +126,13 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
     ``algorithm="auto"`` (the default) consults the planner: cheap
     structural statistics pick the cheapest kernel per the paper's Sec. 7-8
     guidelines, memoized by structural signature so repeated shapes skip
-    re-planning.  A precomputed ``plan`` (from ``planner.plan``) overrides
-    both ``algorithm`` and ``widths``.
+    re-planning.  When the plan elects the BCSR tile route
+    (``plan.algorithm == "tile"``), the product executes on the block
+    executors (Pallas on TPU, compiled XLA elsewhere) end to end — no
+    densify anywhere on that path.  ``algorithm="tile"`` forces the tile
+    route (``tile_block`` picks the block size; plus_times, explicit mask,
+    host-CSR operands only).  A precomputed ``plan`` (from
+    ``planner.plan``) overrides ``algorithm`` and ``widths``.
     """
     m, k = A.shape
     k2, n = B.shape
@@ -138,7 +146,19 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
             widths = plan.widths
         if n_inspect is None:
             n_inspect = plan.n_inspect
+        if tile_block is None and plan.tile_block:
+            tile_block = plan.tile_block
     wa, wb, wm = widths or (None, None, None)
+
+    if algorithm == "tile":
+        from repro.kernels.masked_matmul.ops import tile_path_supported
+        if not tile_path_supported(semiring.name, complement):
+            raise NotImplementedError(
+                "tile route requires plus_times and an explicit mask")
+        if not (isinstance(A, CSR) and isinstance(B, CSR)
+                and isinstance(M, CSR)):
+            raise NotImplementedError("tile route needs host CSR operands")
+        return _masked_spgemm_tile(A, B, M, block_size=tile_block, wm=wm)
 
     A_p = A if isinstance(A, PaddedCSR) else padded_from_csr(A, wa)
     M_p = M if isinstance(M, PaddedCSR) else padded_from_csr(M, wm)
@@ -176,6 +196,80 @@ def symbolic_phase(A: PaddedCSR, M: PaddedCSR, B: Optional[PaddedCSR], *,
     f = jax.vmap(lambda mc, ac, al: acc.symbolic_row(
         mc, ac, al, B.cols, B.lens, n, kdim))
     return f(M.cols, A.cols, A.lens)
+
+
+# ---------------------------------------------------------------------------
+# BCSR tile route: block executors end-to-end, densify-free
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "pm"))
+def _tile_gather(c_blocks, s_blocks, pos, roff, coff, rows, slots, *, m, pm):
+    """Gather per-mask-element values/structure out of the block result and
+    scatter them into the mask-aligned (m, pm) layout."""
+    vals_flat = c_blocks[pos, roff, coff]
+    cnt_flat = s_blocks[pos, roff, coff]
+    vals = jnp.zeros((m, pm), c_blocks.dtype)
+    vals = vals.at[rows, slots].set(vals_flat, mode="drop")
+    present = jnp.zeros((m, pm), bool)
+    present = present.at[rows, slots].set(cnt_flat > 0, mode="drop")
+    return vals, present
+
+
+def _masked_spgemm_tile(A: CSR, B: CSR, M: CSR, *,
+                        block_size: Optional[int] = None,
+                        wm: Optional[int] = None,
+                        interpret=None, backend=None) -> MaskedSpGEMMResult:
+    """Execute C = M (.) (A B) on the BCSR tile pipeline.
+
+    Densify-free end to end: CSR operands scatter into occupied blocks
+    (``bcsr_from_csr``), the vectorized host schedule replays on the block
+    executor, and the result is gathered straight from the output blocks
+    into the same mask-aligned layout the row kernels produce.  ``present``
+    comes from a structural counting replay of the same schedule, so it is
+    exact element-level structure — bitwise the row kernels' semantics,
+    including numeric-cancellation cases.
+    """
+    from repro.kernels.masked_matmul.ops import block_spgemm_with_structure
+
+    m, k = A.shape
+    _, n = B.shape
+    if M.nnz == 0:
+        M_p = padded_from_csr(M, wm)
+        z = jnp.zeros((m, M_p.width), jnp.float32)
+        return MaskedSpGEMMResult(z, jnp.zeros((m, M_p.width), bool),
+                                  M_p.cols, (m, n))
+    if block_size is None:
+        lo = max(8, min(m, k, n))
+        block_size = max(bs for bs in (8, 32, 128) if bs <= lo)
+    bs = block_size
+    Ab = bcsr_from_csr(A, bs)
+    Bb = bcsr_from_csr(B, bs)
+    Mb = bcsr_from_csr(M, bs)
+
+    def pattern(x: CSR):
+        """Stored-entry pattern blocks: 1.0 per CSR entry (an explicitly
+        stored 0.0 is structural to the row kernels)."""
+        ones = CSR(x.indptr, x.indices, np.ones(x.nnz, np.float32), x.shape)
+        return bcsr_from_csr(ones, bs).blocks
+
+    Cb, Sb = block_spgemm_with_structure(
+        Ab, Bb, Mb, a_pattern=pattern(A), b_pattern=pattern(B),
+        interpret=interpret, backend=backend)
+
+    M_p = padded_from_csr(M, wm)
+    pm = M_p.width
+    # host-side addressing: every mask element lives in a mask block by
+    # construction (output structure == mask structure, the 1P allocation)
+    mr = _expand_rows(M.indptr)
+    mc = M.indices
+    pos = bcsr_block_positions(Mb, mr // bs, mc // bs)
+    slots = np.arange(M.nnz, dtype=np.int64) - M.indptr[mr]
+    vals, present = _tile_gather(
+        Cb.blocks, Sb.blocks, jnp.asarray(pos), jnp.asarray(mr % bs),
+        jnp.asarray(mc % bs), jnp.asarray(mr), jnp.asarray(slots),
+        m=m, pm=pm)
+    return MaskedSpGEMMResult(vals, present, M_p.cols, (m, n))
 
 
 # ---------------------------------------------------------------------------

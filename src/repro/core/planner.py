@@ -74,19 +74,32 @@ TRIAL_ITERS = 3
 #: choice is fine); the modeled ranking is used directly
 TRIAL_MIN_ROWS = 256
 
-#: minimum input density for the Pallas tile path: dense (bs x bs) tiles
-#: compute bs^3 flops regardless of occupancy, so sparse operands would be
-#: mostly padding
-TILE_MIN_DENSITY = 0.02
+#: minimum input density for the tile path: dense (bs x bs) tiles compute
+#: bs^3 flops regardless of occupancy, so sparse operands would be mostly
+#: padding.  Re-tuned against benchmarks/bench_tile.py (tile_grid.json):
+#: 0.05 sits between the grid's losing uniform-ER controls (~0.8% density,
+#: tile 2-4.5x slower) and its winning dense-block points (>= 9% density,
+#: tile 9-50x faster); at the old 0.02 only the cost model kept marginal
+#: uniform-sparse operands out of the tile route
+TILE_MIN_DENSITY = 0.05
 #: minimum expected nonzeros per (bs x bs) tile for a block size to be
-#: worth scheduling
-TILE_MIN_OCCUPANCY = 2.0
+#: worth scheduling (bench_tile: winning regimes all sit far above this;
+#: between 2 and 4 the grid's marginal points flip from ~par to >10% loss)
+TILE_MIN_OCCUPANCY = 4.0
 #: block sizes the tile path will consider, largest first (MXU-aligned on
-#: TPU; interpret mode on CPU accepts any of these)
+#: TPU; the XLA executor on CPU accepts any of these)
 TILE_BLOCK_SIZES = (128, 32, 8)
 #: minimum fraction of mask nonzeros the symbolic probe must see hit by
 #: the product for the tile path to stay eligible
 TILE_MIN_HIT_RATE = 0.05
+
+#: tile-route cost model constants (ms), CPU-calibrated against
+#: benchmarks/bench_tile.py like COST_CONSTANTS: host covers the
+#: bcsr_from_csr scatters + vectorized schedule build (per element/worklist
+#: entry), mac the batched block products of the two device replays
+#: (values + structure), gather the per-mask-element result extraction
+TILE_COST = dict(base=3.0, per_host=2.5e-4, per_mac=1.6e-7,
+                 per_gather=3.0e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -265,13 +278,57 @@ def _tile_path(stats: PlanStats) -> Tuple[bool, int]:
     return False, 0
 
 
-def decide(stats: PlanStats) -> Plan:
+def _block_occupancy(dens: float, bs: int) -> float:
+    """P(a bs x bs block holds >= 1 nonzero) under uniform sparsity."""
+    return float(-np.expm1(bs * bs * np.log1p(-min(dens, 1 - 1e-12))))
+
+
+def tile_cost(stats: PlanStats, bs: int) -> float:
+    """Modeled total ms of the BCSR tile route at block size ``bs``.
+
+    Random-occupancy model: expected occupied blocks per operand, expected
+    worklist length (mask blocks x expected block-row/block-col
+    intersection), then the same host/device/extract decomposition the
+    route actually executes.  Units match the row-kernel hooks (total ms
+    at stats scale) so the planner can rank them side by side.
+    """
+    c = TILE_COST
+    m, k, n = stats.m, stats.k, stats.n
+    dens_a = stats.nnz_a / max(1, m * k)
+    dens_b = stats.nnz_b / max(1, k * n)
+    dens_m = stats.nnz_m / max(1, m * n)
+    mb, kb, nb = -(-m // bs), -(-k // bs), -(-n // bs)
+    p_a = _block_occupancy(dens_a, bs)
+    p_b = _block_occupancy(dens_b, bs)
+    p_m = _block_occupancy(dens_m, bs)
+    m_blocks = mb * nb * p_m
+    worklist = m_blocks * kb * p_a * p_b
+    host = c["per_host"] * (stats.nnz_a + stats.nnz_b + stats.nnz_m
+                            + worklist)
+    mac = c["per_mac"] * 2.0 * worklist * bs ** 3   # values + structure
+    gather = c["per_gather"] * stats.nnz_m
+    return c["base"] + host + mac + gather
+
+
+def decide(stats: PlanStats, *, allow_tile: bool = True) -> Plan:
     """Pure decision function: statistics -> Plan (paper Sec. 7-8 encoded in
-    the accumulator cost hooks)."""
+    the accumulator cost hooks, plus the TPU-native tile route).
+
+    ``allow_tile=False`` keeps the tile route out of the ranking (it still
+    reports eligibility) — used by callers that can only execute the
+    vmapped row kernels, like the batched driver.
+    """
     costs = rank_algorithms(stats)
+    tile_eligible, tile_block = _tile_path(stats)
+    # the tile route enters the ranking only when the stats carry a real
+    # symbolic probe (flops > 0): width-only stats (device-resident or
+    # hand-built) lack the occupancy evidence the gate relies on
+    if allow_tile and tile_eligible and stats.flops > 0:
+        costs = tuple(sorted(
+            costs + (("tile", tile_cost(stats, tile_block)),),
+            key=lambda kv: (kv[1], kv[0])))
     algorithm = costs[0][0]
     wb = stats.wbt if algorithm == "inner" else stats.wb
-    tile_eligible, tile_block = _tile_path(stats)
     return Plan(
         algorithm=algorithm,
         widths=(stats.wa, wb, stats.pm),
@@ -331,10 +388,11 @@ def _refine_with_trial(A: CSR, B: CSR, M: CSR, p: Plan,
 
     def make(name):
         widths = (s.wa, s.wbt if name == "inner" else s.wb, s.pm)
+        tb = p.tile_block if name == "tile" else None
 
         def call():
             out = masked_spgemm(A, B, M, algorithm=name, semiring=semiring,
-                                widths=widths)
+                                widths=widths, tile_block=tb)
             out.vals.block_until_ready()
 
         return call
@@ -502,7 +560,9 @@ def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
     stats = dataclasses.replace(
         stats, wa=max(width(a) for a in As), pm=max(width(m) for m in Ms),
         b_transposable=not isinstance(B, PaddedCSR))
-    p = decide(stats)
+    # the batched driver compiles ONE vmapped row program for the whole
+    # batch; the tile route has no batched form yet
+    p = decide(stats, allow_tile=False)
 
     _cache_put(key, p)
     return p

@@ -4,12 +4,28 @@ The schedule builder is the TPU incarnation of the paper's symbolic phase:
 because the mask's block structure bounds the output (paper §6, the 1P
 insight), the output allocation and the worklist are fully determined on the
 host before any device compute — so the device program is a single static
-numeric phase.
+numeric phase.  The builder is pure vectorized numpy (segment ops over the
+CSR structures); the per-block Python loops of the original demo would
+dominate end-to-end time and defeat the point of a free symbolic phase.
+
+Two executors replay the worklist:
+
+* ``backend="pallas"`` — the Mosaic kernels in ``kernel.py`` (sequential
+  grid, VMEM accumulator).  The real TPU path; ``interpret=True`` emulates
+  it on CPU for tests.
+* ``backend="xla"``    — gather + batched matmul + segment-sum, compiled by
+  XLA.  The fast path on CPU/GPU where Pallas interpret mode would be pure
+  Python overhead.
+
+``backend=None`` picks pallas on TPU and xla elsewhere, re-queried per call
+(the backend can change mid-process, e.g. tests forcing CPU after a TPU
+probe — caching the first answer forever ran compiled-mode kernels in the
+wrong mode).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,20 +34,21 @@ import numpy as np
 from repro.core.formats import BCSR
 from .kernel import masked_matmul_kernel, block_spgemm_kernel
 
-_ON_TPU = None
+Schedule = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
 
 def on_tpu() -> bool:
-    global _ON_TPU
-    if _ON_TPU is None:
-        _ON_TPU = jax.default_backend() == "tpu"
-    return _ON_TPU
+    """Whether the *current* default backend is TPU (never cached here:
+    ``jax.default_backend()`` is already memoized by jax and invalidated
+    when the platform changes, so a module-global cache could only be
+    stale, never faster)."""
+    return jax.default_backend() == "tpu"
 
 
 def tile_path_supported(semiring_name: str, complement: bool) -> bool:
-    """Whether the Pallas tile kernels can express this product.
+    """Whether the tile kernels can express this product.
 
-    Both kernels accumulate with a dense MXU dot, so only the plus_times
+    Both executors accumulate with a dense MXU dot, so only the plus_times
     semiring is representable, and the mask must be explicit (a complement's
     output is not bounded by the mask's block structure).  The planner
     (``repro.core.planner``) consults this plus an occupancy estimate to set
@@ -50,89 +67,256 @@ def masked_matmul(a, b, bi, bj, *, bm, bn, bk, interpret=None):
 
 
 # ---------------------------------------------------------------------------
-# BCSR x BCSR schedule (host)
+# BCSR x BCSR schedule (host, vectorized)
 # ---------------------------------------------------------------------------
 
 
-def build_spgemm_schedule(A: BCSR, B: BCSR, M: BCSR
-                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                     np.ndarray]:
+def _empty_schedule() -> Schedule:
+    z = np.zeros(0, np.int32)
+    return z, z.copy(), z.copy(), z.copy()
+
+
+def build_spgemm_schedule(A: BCSR, B: BCSR, M: BCSR) -> Schedule:
     """Worklist (rank, posA, posB, flags) for C = M (.) (A B) on block
     structures.
 
-    This is the paper's Heap merge done once on the host: for every mask
-    block (i, j) [rank r in M's CSR order], intersect A's block-row i with
-    B's block-column j.  Mask blocks with no contribution get a single
-    zero-fill entry (flags real-bit = 0) so the kernel's output is fully
-    defined.
+    For every mask block (i, j) [rank r in M's CSR order], the worklist
+    holds one entry per block k with A[i, k] and B[k, j] both present, in
+    ascending k; mask blocks with no contribution get a single zero-fill
+    entry (flags real-bit = 0) so the kernel's output is fully defined.
+    ``flags`` bits: 1 = first visit of rank, 2 = real product, 4 = last
+    visit of rank.
+
+    Implementation is pure vectorized numpy: the candidate set (every
+    (mask block, A block) pair sharing a block row) is expanded with
+    segment ops, then matched against B's column-major structure with one
+    searchsorted over composite (block-col, block-row) keys.  Work and
+    memory are O(sum over mask blocks of nnzb(A block-row)) — the same
+    asymptotics the per-block Python loop had, minus the interpreter.
     """
-    # B column-major view for the intersection
+    if M.nnzb == 0:
+        return _empty_schedule()
+
     from repro.core.formats import bcsr_structure_transpose
     bt_indptr, bt_rows, bt_pos = bcsr_structure_transpose(B)
 
-    rank, pa, pb, flags = [], [], [], []
-    r = 0
-    for i in range(M.block_rows):
-        a_cols = A.block_row(i)
-        a_pos = np.arange(A.indptr[i], A.indptr[i + 1])
-        for j in M.block_row(i):
-            b_rows = bt_rows[bt_indptr[j]: bt_indptr[j + 1]]
-            b_pos = bt_pos[bt_indptr[j]: bt_indptr[j + 1]]
-            # sorted intersection of a_cols (A block-row i) and b_rows
-            ks, ai, bix = np.intersect1d(a_cols, b_rows,
-                                         return_indices=True)
-            if len(ks) == 0:
-                rank.append(r); pa.append(0); pb.append(0)
-                flags.append(1 | 4)  # first+last, not real -> zero fill
-            else:
-                for t in range(len(ks)):
-                    f = 2
-                    if t == 0:
-                        f |= 1
-                    if t == len(ks) - 1:
-                        f |= 4
-                    rank.append(r)
-                    pa.append(int(a_pos[ai[t]]))
-                    pb.append(int(b_pos[bix[t]]))
-                    flags.append(f)
-            r += 1
-    return (np.asarray(rank, np.int32), np.asarray(pa, np.int32),
-            np.asarray(pb, np.int32), np.asarray(flags, np.int32))
+    nnzb_m = M.nnzb
+    mi = np.repeat(np.arange(M.block_rows, dtype=np.int64),
+                   np.diff(M.indptr))                  # mask block-row per rank
+    mj = M.indices                                     # mask block-col per rank
+
+    # expand: one candidate per (rank, A block in block-row mi[rank])
+    a_cnt = np.diff(A.indptr)
+    counts = a_cnt[mi]
+    total = int(counts.sum())
+    rep_r = np.repeat(np.arange(nnzb_m, dtype=np.int64), counts)
+    starts = np.zeros(nnzb_m, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    within = np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+    a_pos = A.indptr[mi[rep_r]] + within
+    k = A.indices[a_pos]
+
+    # match candidates against B's column-major structure: bt is sorted by
+    # (block-col, block-row), so composite keys are globally sorted and one
+    # searchsorted resolves every candidate
+    kb = B.block_rows
+    bt_cols = np.repeat(np.arange(B.block_cols, dtype=np.int64),
+                        np.diff(bt_indptr))
+    bt_key = bt_cols * kb + bt_rows
+    cand_key = mj[rep_r] * kb + k
+    if len(bt_key):
+        pos = np.searchsorted(bt_key, cand_key)
+        pos_c = np.minimum(pos, len(bt_key) - 1)
+        hit = (pos < len(bt_key)) & (bt_key[pos_c] == cand_key)
+    else:
+        hit = np.zeros(total, dtype=bool)
+
+    rank = rep_r[hit]                 # nondecreasing: rep_r was, filter keeps
+    pa = a_pos[hit]
+    pb = bt_pos[np.minimum(pos[hit], max(0, len(bt_key) - 1))] \
+        if len(bt_key) else np.zeros(0, np.int64)
+    real = np.ones(len(rank), dtype=np.int32)
+
+    # zero-fill entries for mask blocks with no contribution
+    per_rank = np.bincount(rank, minlength=nnzb_m)
+    empty = np.nonzero(per_rank == 0)[0]
+    if len(empty):
+        rank = np.concatenate([rank, empty])
+        pa = np.concatenate([pa, np.zeros(len(empty), np.int64)])
+        pb = np.concatenate([pb, np.zeros(len(empty), np.int64)])
+        real = np.concatenate([real, np.zeros(len(empty), np.int32)])
+        order = np.argsort(rank, kind="stable")
+        rank, pa, pb, real = rank[order], pa[order], pb[order], real[order]
+
+    first = np.empty(len(rank), dtype=bool)
+    first[:1] = True
+    np.not_equal(rank[1:], rank[:-1], out=first[1:])
+    last = np.empty(len(rank), dtype=bool)
+    last[-1:] = True
+    np.not_equal(rank[1:], rank[:-1], out=last[:-1])
+    flags = first * 1 + real * 2 + last * 4
+    return (rank.astype(np.int32), pa.astype(np.int32),
+            pb.astype(np.int32), flags.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Worklist executors
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit,
                    static_argnames=("nnzb_out", "bs", "interpret"))
-def _block_spgemm_jit(a_blocks, b_blocks, rank, pa, pb, flags, *,
-                      nnzb_out, bs, interpret):
+def _block_spgemm_pallas(a_blocks, b_blocks, rank, pa, pb, flags, *,
+                         nnzb_out, bs, interpret):
     return block_spgemm_kernel(a_blocks, b_blocks, rank, pa, pb, flags,
                                nnzb_out, bs=bs, interpret=interpret)
 
 
-def block_spgemm(A: BCSR, B: BCSR, M: BCSR, *, interpret=None) -> BCSR:
+@jax.jit
+def _xla_chunk_add(out, a_blocks, b_blocks, rank, pa, pb, flags):
+    """One worklist chunk: gather, batched matmul, segment-add into ``out``.
+    Zero-fill entries (real-bit off) gather block 0 but contribute
+    nothing."""
+    real = ((flags >> 1) & 1).astype(jnp.float32)
+    prods = jnp.einsum("wij,wjk->wik",
+                       a_blocks[pa].astype(jnp.float32),
+                       b_blocks[pb].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    return out.at[rank].add(prods * real[:, None, None])
+
+
+#: peak f32 elements the XLA executor materializes per worklist chunk
+#: (~64 MB); bounds device memory at O(chunk * bs^2) instead of O(W * bs^2)
+#: for huge worklists, where one unchunked einsum could out-allocate the
+#: very densify this pipeline removed
+_XLA_CHUNK_ELEMS = 1 << 24
+
+
+def _block_spgemm_xla(a_blocks, b_blocks, rank, pa, pb, flags, *,
+                      nnzb_out, bs):
+    """XLA replay of the worklist, chunked to bound peak memory.
+
+    Chunks are independent partial sums into the same output (the rank
+    segment-add is associative), so first/last flags are irrelevant here —
+    only the real-bit is consulted.  The tail chunk is padded with
+    real-bit-off entries to keep exactly one compiled chunk shape.
+    """
+    W = int(rank.shape[0])
+    chunk = max(1, _XLA_CHUNK_ELEMS // (bs * bs))
+    out = jnp.zeros((nnzb_out, bs, bs), jnp.float32)
+    if W <= chunk:
+        return _xla_chunk_add(out, a_blocks, b_blocks, rank, pa, pb, flags)
+    pad = -W % chunk
+    if pad:
+        z = jnp.zeros(pad, rank.dtype)
+        rank, pa, pb = (jnp.concatenate([x, z]) for x in (rank, pa, pb))
+        flags = jnp.concatenate([flags, z])
+    for s in range(0, W + pad, chunk):
+        e = s + chunk
+        out = _xla_chunk_add(out, a_blocks, b_blocks, rank[s:e], pa[s:e],
+                             pb[s:e], flags[s:e])
+    return out
+
+
+def _run_schedule(A: BCSR, B: BCSR, M: BCSR, schedule: Schedule,
+                  blocks_a, blocks_b, *, interpret, backend):
+    bs = A.block_size
+    if backend is None:
+        # an explicit interpret flag requests the pallas path (tests
+        # exercise the kernel in interpret mode on CPU)
+        backend = "pallas" if (interpret is not None or on_tpu()) else "xla"
+    # an empty operand leaves only zero-fill entries in the worklist, but
+    # those still address block 0 — give them one zero block to read
+    if blocks_a.shape[0] == 0:
+        blocks_a = jnp.zeros((1, bs, bs), blocks_a.dtype)
+    if blocks_b.shape[0] == 0:
+        blocks_b = jnp.zeros((1, bs, bs), blocks_b.dtype)
+    rank, pa, pb, flags = (jnp.asarray(x) for x in schedule)
+    if backend == "pallas":
+        interpret = (not on_tpu()) if interpret is None else interpret
+        return _block_spgemm_pallas(blocks_a, blocks_b, rank, pa, pb, flags,
+                                    nnzb_out=M.nnzb, bs=bs,
+                                    interpret=interpret)
+    if backend == "xla":
+        return _block_spgemm_xla(blocks_a, blocks_b, rank, pa, pb, flags,
+                                 nnzb_out=M.nnzb, bs=bs)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def block_spgemm(A: BCSR, B: BCSR, M: BCSR, *, interpret=None,
+                 backend: Optional[str] = None,
+                 schedule: Optional[Schedule] = None) -> BCSR:
     """C = M (.) (A B) at tile granularity.  Output structure == M structure
-    (the 1P allocation); zero blocks are kept (callers may prune)."""
+    (the 1P allocation); zero blocks are kept (callers may prune via
+    ``bcsr_to_csr``).
+
+    An all-empty mask is a defined degenerate case: the worklist is empty
+    and an empty BCSR is returned without launching a kernel.  Pass a
+    precomputed ``schedule`` to amortize the symbolic phase across several
+    numeric replays (e.g. a values pass and a structure pass).
+    """
     assert A.block_size == B.block_size == M.block_size
     bs = A.block_size
-    rank, pa, pb, flags = build_spgemm_schedule(A, B, M)
-    interpret = (not on_tpu()) if interpret is None else interpret
-    blocks = _block_spgemm_jit(
-        A.blocks, B.blocks, jnp.asarray(rank), jnp.asarray(pa),
-        jnp.asarray(pb), jnp.asarray(flags),
-        nnzb_out=M.nnzb, bs=bs, interpret=interpret)
+    if M.nnzb == 0:
+        return BCSR(M.indptr.copy(), M.indices.copy(),
+                    jnp.zeros((0, bs, bs), jnp.float32),
+                    (M.shape[0], B.shape[1]), bs)
+    if schedule is None:
+        schedule = build_spgemm_schedule(A, B, M)
+    blocks = _run_schedule(A, B, M, schedule, A.blocks, B.blocks,
+                           interpret=interpret, backend=backend)
     return BCSR(M.indptr.copy(), M.indices.copy(), blocks,
                 (M.shape[0], B.shape[1]), bs)
 
 
-def block_spgemm_from_csr(A, B, M, *, block_size: int,
-                          interpret=None) -> BCSR:
+def block_spgemm_with_structure(A: BCSR, B: BCSR, M: BCSR, *,
+                                a_pattern=None, b_pattern=None,
+                                interpret=None,
+                                backend: Optional[str] = None
+                                ) -> Tuple[BCSR, BCSR]:
+    """(values, structural-counts) pair sharing ONE schedule build.
+
+    The second BCSR replays the same worklist over the operands' 0/1
+    patterns; its entries count structural contributions, so ``count > 0``
+    is exact element-level presence — identical to the row kernels'
+    structural semantics even when numeric cancellation produces a stored
+    0.0 in the values pass.  ``a_pattern``/``b_pattern`` are optional
+    (nnzb, bs, bs) 0/1 block arrays marking the operands' *stored entries*
+    (the row kernels treat an explicitly stored 0.0 as structural); when
+    omitted, value-nonzeroness of the blocks is used, which cannot tell a
+    stored zero from block padding.
+    """
+    assert A.block_size == B.block_size == M.block_size
+    bs = A.block_size
+    shape = (M.shape[0], B.shape[1])
+    if M.nnzb == 0:
+        empty = jnp.zeros((0, bs, bs), jnp.float32)
+        return (BCSR(M.indptr.copy(), M.indices.copy(), empty, shape, bs),
+                BCSR(M.indptr.copy(), M.indices.copy(), empty, shape, bs))
+    schedule = build_spgemm_schedule(A, B, M)
+    vals = _run_schedule(A, B, M, schedule, A.blocks, B.blocks,
+                         interpret=interpret, backend=backend)
+    if a_pattern is None:
+        a_pattern = (A.blocks != 0).astype(jnp.float32)
+    if b_pattern is None:
+        b_pattern = (B.blocks != 0).astype(jnp.float32)
+    struct = _run_schedule(A, B, M, schedule, a_pattern, b_pattern,
+                           interpret=interpret, backend=backend)
+    return (BCSR(M.indptr.copy(), M.indices.copy(), vals, shape, bs),
+            BCSR(M.indptr.copy(), M.indices.copy(), struct, shape, bs))
+
+
+def block_spgemm_from_csr(A, B, M, *, block_size: int, interpret=None,
+                          backend: Optional[str] = None) -> BCSR:
     """Tile path from host CSR operands (the ``Plan.tile_eligible`` route).
 
-    Densifies per tile via ``bcsr_from_dense`` — callers should only take
-    this route when the planner's occupancy estimate says dense tiles pay
-    off (``Plan.tile_block`` gives the block size it checked).
+    Densify-free: operands are scattered straight into their occupied
+    blocks (``bcsr_from_csr``), so memory stays O(occupied blocks) instead
+    of O(m*n) — the property that makes this route usable at scales where
+    the original demo's ``to_dense`` re-blocking could not run.
     """
-    from repro.core.formats import bcsr_from_dense
-    Ab = bcsr_from_dense(A.to_dense(), block_size)
-    Bb = bcsr_from_dense(B.to_dense(), block_size)
-    Mb = bcsr_from_dense(M.to_dense(), block_size)
-    return block_spgemm(Ab, Bb, Mb, interpret=interpret)
+    from repro.core.formats import bcsr_from_csr
+    Ab = bcsr_from_csr(A, block_size)
+    Bb = bcsr_from_csr(B, block_size)
+    Mb = bcsr_from_csr(M, block_size)
+    return block_spgemm(Ab, Bb, Mb, interpret=interpret, backend=backend)

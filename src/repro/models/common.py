@@ -15,7 +15,8 @@ TP = "model"             # tensor/expert-parallel axis
 
 def _mesh_axis_names():
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.compat import get_abstract_mesh
+        mesh = get_abstract_mesh()
         return tuple(mesh.axis_names) if mesh is not None else ()
     except Exception:
         return ()

@@ -14,6 +14,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.core.formats import (  # noqa: E402
     csr_from_dense, padded_from_csr)
 from repro.core.distributed import (  # noqa: E402
@@ -62,6 +63,19 @@ def main():
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
     print("ring_summa OK")
 
+    # ---- ring-SUMMA tile skipping: fully-masked column panels -------------
+    # block=8 -> 5 column panels of the 40-wide output; panels 1 and 3 are
+    # fully masked out and must be skipped (and still come out zero)
+    mask2 = mask.copy()
+    mask2[:, 8:16] = 0.0
+    mask2[:, 24:32] = 0.0
+    got = ring_masked_matmul(jnp.asarray(a), jnp.asarray(b),
+                             jnp.asarray(mask2), mesh, axis="data", block=8)
+    want = np.where(mask2 != 0, a @ b, 0.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(got)[:, 8:16]).sum() == 0.0
+    print("ring_summa_skip OK")
+
     # HLO must contain collective-permute (the overlap schedule exists)
     lowered = jax.jit(
         lambda a, b, mk: ring_masked_matmul(a, b, mk, mesh)).lower(
@@ -87,7 +101,7 @@ def moe_ep_check():
                     jnp.float32) * 0.3
     dense = Lyr._apply_moe_dense(params, cfg, x)
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ep = jax.jit(lambda p, xx: Lyr.apply_moe(p, cfg, xx))(params, x)
     np.testing.assert_allclose(np.asarray(ep), np.asarray(dense),
                                rtol=2e-4, atol=2e-5)

@@ -121,10 +121,10 @@ def test_compression_error_feedback():
         out, new_e = allreduce_compressed({"w": gw}, {"w": ew}, ("data",))
         return out["w"], new_e["w"]
 
-    f = jax.shard_map(local, mesh=mesh,
-                      in_specs=(jax.sharding.PartitionSpec(),) * 2,
-                      out_specs=(jax.sharding.PartitionSpec(),) * 2,
-                      check_vma=False)
+    from repro.compat import shard_map
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(jax.sharding.PartitionSpec(),) * 2,
+                  out_specs=(jax.sharding.PartitionSpec(),) * 2)
     got, err = f(g["w"], e["w"])
     # single device: dequantized value + error == original exactly
     np.testing.assert_allclose(np.asarray(got) + np.asarray(err),

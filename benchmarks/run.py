@@ -13,8 +13,8 @@ import argparse
 import time
 import traceback
 
-ORDER = ("density", "planner", "tile", "triangle", "rmat", "scaling",
-         "ktruss", "bc", "block")
+ORDER = ("density", "planner", "tile", "dist", "triangle", "rmat",
+         "scaling", "ktruss", "bc", "block")
 
 
 def main() -> None:
@@ -26,7 +26,7 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ORDER)
 
-    from . import (bench_bc, bench_block_kernel, bench_density,
+    from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
                    bench_ktruss, bench_planner, bench_rmat_scale,
                    bench_scaling, bench_tile, bench_triangle)
     if args.smoke:
@@ -34,13 +34,20 @@ def main() -> None:
                           iters=3)
         tile_kw = dict(n=128, block_sizes=(8, 16), tile_densities=(0.3,),
                        mask_occupancies=(0.5,), iters=1)
+        dist_kw = dict(n=256, mesh_sizes=(2, 4), densities_b=(0.02, 0.3),
+                       iters=1)
     else:
         density_kw = dict(n=2048 if args.full else 1024)
         tile_kw = dict(n=512)
+        # full tier matches the committed dist_grid.json calibration run;
+        # the default tier trims the grid like its neighbors do
+        dist_kw = dict() if args.full else dict(n=1024, mesh_sizes=(2, 4),
+                                                densities_b=(0.02, 0.3))
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
         "planner": lambda: bench_planner.run(**density_kw),
         "tile": lambda: bench_tile.run(**tile_kw),
+        "dist": lambda: bench_dist.run(**dist_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

@@ -76,7 +76,29 @@ def main():
     C = block_spgemm(Ab, Bb, Mb)
     print("block_spgemm tiles =", C.nnzb)
 
-    # --- 5. a real application: triangle counting --------------------------
+    # --- 5. distributed: the same product across a mesh --------------------
+    # ``distributed_masked_spgemm`` is the mesh counterpart of
+    # ``masked_spgemm``: ``algorithm="auto"`` weighs replicating B
+    # (row-parallel, zero numeric-phase communication) against rotating
+    # B's occupied BCSR K-slabs around a ring (sparse ring-SUMMA — no
+    # dense (k, n)/(m, n) array anywhere, memory O(nnzb/p) per device).
+    # Runs on any mesh; here the 1-device degenerate ring.  Multi-device
+    # CPU runs force fake host devices BEFORE importing jax, e.g.
+    #   XLA_FLAGS=--xla_force_host_platform_device_count=8
+    # (see tests/dist_sparse_check.py for the 8-way harness).
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.distributed import distributed_masked_spgemm
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    out = distributed_masked_spgemm(csr_from_dense(A), csr_from_dense(B),
+                                    csr_from_dense(M), mesh)
+    print("distributed nnz(C) =", int(out.nnz))
+    forced = distributed_masked_spgemm(csr_from_dense(A), csr_from_dense(B),
+                                       csr_from_dense(M), mesh,
+                                       algorithm="ring", block_size=8)
+    print("sparse ring nnz(C) =", int(forced.nnz))
+
+    # --- 6. a real application: triangle counting --------------------------
     g = erdos_renyi(512, 8, seed=1)
     tri, secs = triangle_count(g, algorithm="msa")
     print(f"triangles = {tri} ({secs * 1e3:.0f} ms masked-SpGEMM time)")

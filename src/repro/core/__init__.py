@@ -1,15 +1,22 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .distributed import (distributed_masked_spgemm, ring_masked_matmul,
+                          ring_sparse_masked_spgemm,
+                          row_parallel_masked_spgemm)
 from .masked_spgemm import (ALGORITHMS, MaskedSpGEMMResult, dense_oracle,
                             masked_spgemm, masked_spgemm_batched)
-from .planner import (Plan, PlanStats, clear_plan_cache, collect_stats,
-                      decide, plan, plan_batch, plan_cache_info,
-                      rank_algorithms)
+from .planner import (DistPlan, Plan, PlanStats, clear_plan_cache,
+                      collect_stats, decide, decide_distributed,
+                      distributed_costs, plan, plan_batch, plan_cache_info,
+                      plan_distributed, rank_algorithms)
 
 __all__ = [
     "ALGORITHMS", "MaskedSpGEMMResult", "dense_oracle", "masked_spgemm",
-    "masked_spgemm_batched", "Plan", "PlanStats", "clear_plan_cache",
-    "collect_stats", "decide", "plan", "plan_batch", "plan_cache_info",
-    "rank_algorithms",
+    "masked_spgemm_batched", "distributed_masked_spgemm",
+    "ring_masked_matmul", "ring_sparse_masked_spgemm",
+    "row_parallel_masked_spgemm", "DistPlan", "Plan", "PlanStats",
+    "clear_plan_cache", "collect_stats", "decide", "decide_distributed",
+    "distributed_costs", "plan", "plan_batch", "plan_cache_info",
+    "plan_distributed", "rank_algorithms",
 ]

@@ -19,7 +19,7 @@ assumes sorted inputs for MCA and Heap).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,14 +77,10 @@ class CSR:
         )
 
     def sorted_rows(self) -> "CSR":
-        indices = self.indices.copy()
-        data = self.data.copy()
-        for i in range(self.shape[0]):
-            s, e = self.indptr[i], self.indptr[i + 1]
-            order = np.argsort(indices[s:e], kind="stable")
-            indices[s:e] = indices[s:e][order]
-            data[s:e] = data[s:e][order]
-        return CSR(self.indptr, indices, data, self.shape)
+        rows = _expand_rows(self.indptr)
+        order = np.lexsort((self.indices, rows))
+        return CSR(self.indptr, self.indices[order], self.data[order],
+                   self.shape)
 
 
 def _expand_rows(indptr: np.ndarray) -> np.ndarray:
@@ -172,11 +168,14 @@ def padded_from_csr(a: CSR, width: Optional[int] = None, dtype=jnp.float32) -> P
     w = int(width if width is not None else max(1, int(row_nnz.max(initial=0))))
     cols = np.full((m, w), n, dtype=np.int32)
     vals = np.zeros((m, w), dtype=np.float32)
-    for i in range(m):
-        c, v = a.row(i)
-        k = min(len(c), w)
-        cols[i, :k] = c[:k]
-        vals[i, :k] = v[:k]
+    # vectorized scatter: slot of entry e is its offset within its row;
+    # entries beyond the requested width are dropped (same as the old
+    # per-row loop, without the per-row Python cost)
+    rows = _expand_rows(a.indptr)
+    slots = np.arange(a.nnz, dtype=np.int64) - a.indptr[rows]
+    keep = slots < w
+    cols[rows[keep], slots[keep]] = a.indices[keep]
+    vals[rows[keep], slots[keep]] = a.data[keep]
     return PaddedCSR(
         jnp.asarray(cols), jnp.asarray(vals, dtype=dtype),
         jnp.asarray(np.minimum(row_nnz, w), dtype=jnp.int32), (m, n)
@@ -352,6 +351,88 @@ def bcsr_structure_transpose(a: BCSR) -> Tuple[np.ndarray, np.ndarray, np.ndarra
     indptr_t = np.zeros(nb + 1, dtype=np.int64)
     np.add.at(indptr_t, cols_t + 1, 1)
     return np.cumsum(indptr_t), rows_t, pos_t
+
+
+# --------------------------------------------------------------------------
+# BCSR panel helpers (distributed ring-SUMMA: row-panels and K-slabs)
+# --------------------------------------------------------------------------
+
+
+def bcsr_pad_block_rows(a: BCSR, target_block_rows: int) -> BCSR:
+    """Append empty block rows so ``a`` has exactly ``target_block_rows``.
+
+    The element shape grows with the padding (the new rows are structurally
+    empty), so downstream panel splits see equal shards.
+    """
+    mb = a.block_rows
+    if target_block_rows < mb:
+        raise ValueError(f"cannot shrink {mb} block rows to "
+                         f"{target_block_rows}")
+    if target_block_rows == mb:
+        return a
+    indptr = np.concatenate([
+        a.indptr,
+        np.full(target_block_rows - mb, a.indptr[-1], dtype=a.indptr.dtype)])
+    return BCSR(indptr, a.indices, a.blocks,
+                (target_block_rows * a.block_size, a.shape[1]), a.block_size)
+
+
+def bcsr_row_panels(a: BCSR, nparts: int) -> Tuple[BCSR, ...]:
+    """Split ``a`` into ``nparts`` equal block-row panels.
+
+    Requires ``a.block_rows % nparts == 0`` (pad first via
+    ``bcsr_pad_block_rows``).  Each panel's ``indptr`` is rebased to start
+    at 0 and its ``blocks`` is the contiguous device slice of the parent's
+    blocks, so panel-local schedule positions index the panel directly.
+    """
+    mb = a.block_rows
+    if mb % nparts:
+        raise ValueError(f"{mb} block rows do not split into {nparts} panels")
+    rows_per = mb // nparts
+    out = []
+    for d in range(nparts):
+        lo, hi = d * rows_per, (d + 1) * rows_per
+        s, e = int(a.indptr[lo]), int(a.indptr[hi])
+        out.append(BCSR(a.indptr[lo:hi + 1] - a.indptr[lo],
+                        a.indices[s:e], a.blocks[s:e],
+                        (rows_per * a.block_size, a.shape[1]),
+                        a.block_size))
+    return tuple(out)
+
+
+def bcsr_concat_row_panels(panels: Sequence[BCSR]) -> BCSR:
+    """Inverse of ``bcsr_row_panels``: stack block-row panels vertically."""
+    if not panels:
+        raise ValueError("no panels")
+    bs = panels[0].block_size
+    ncols = panels[0].shape[1]
+    indptrs = [panels[0].indptr]
+    offset = panels[0].indptr[-1]
+    for p in panels[1:]:
+        assert p.block_size == bs and p.shape[1] == ncols
+        indptrs.append(p.indptr[1:] + offset)
+        offset = offset + p.indptr[-1]
+    xp = np if all(isinstance(p.blocks, np.ndarray) for p in panels) else jnp
+    blocks = (xp.concatenate([p.blocks for p in panels])
+              if sum(p.nnzb for p in panels)
+              else panels[0].blocks[:0])
+    return BCSR(np.concatenate(indptrs),
+                np.concatenate([p.indices for p in panels]),
+                blocks,
+                (sum(p.shape[0] for p in panels), ncols), bs)
+
+
+def pad_panel_blocks(blocks: Array, target_nnzb: int) -> Array:
+    """Pad a (nnzb, bs, bs) block array with zero blocks to ``target_nnzb``
+    (>= 1), giving every ring participant one static ``ppermute`` shape.
+    Works on device or host (numpy) blocks without changing residency."""
+    xp = np if isinstance(blocks, np.ndarray) else jnp
+    nnzb = blocks.shape[0]
+    target = max(1, target_nnzb)
+    if nnzb == target:
+        return blocks
+    pad = xp.zeros((target - nnzb,) + tuple(blocks.shape[1:]), blocks.dtype)
+    return xp.concatenate([blocks, pad]) if nnzb else pad
 
 
 # --------------------------------------------------------------------------

@@ -137,11 +137,27 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
     m, k = A.shape
     k2, n = B.shape
     assert k == k2, (A.shape, B.shape)
+    if two_phase and algorithm == "tile":
+        # the tile route's symbolic phase is the host schedule build; a 2P
+        # padded-width pass has no meaning there, and silently ignoring the
+        # request would misreport what was measured
+        raise NotImplementedError(
+            "two_phase is not supported by the tile route (its symbolic "
+            "phase is the host schedule build); use a row algorithm")
     if plan is None and algorithm == "auto":
         from .planner import plan as _plan
         plan = _plan(A, B, M, complement=complement, semiring=semiring)
     if plan is not None:
         algorithm = plan.algorithm
+        if algorithm == "tile" and two_phase:
+            # an auto-elected tile route cannot honor two_phase: fall back
+            # to the cheapest row kernel from the same plan's ranking
+            algorithm = next(name for name, _ in plan.costs
+                             if name != "tile")
+            s = plan.stats
+            if widths is None:
+                widths = (s.wa, s.wbt if algorithm == "inner" else s.wb,
+                          s.pm)
         if widths is None:
             widths = plan.widths
         if n_inspect is None:
@@ -240,8 +256,8 @@ def _masked_spgemm_tile(A: CSR, B: CSR, M: CSR, *,
         return MaskedSpGEMMResult(z, jnp.zeros((m, M_p.width), bool),
                                   M_p.cols, (m, n))
     if block_size is None:
-        lo = max(8, min(m, k, n))
-        block_size = max(bs for bs in (8, 32, 128) if bs <= lo)
+        from .planner import ring_block_candidates
+        block_size = ring_block_candidates(m, k, n)[0]
     bs = block_size
     Ab = bcsr_from_csr(A, bs)
     Bb = bcsr_from_csr(B, bs)
@@ -256,17 +272,30 @@ def _masked_spgemm_tile(A: CSR, B: CSR, M: CSR, *,
     Cb, Sb = block_spgemm_with_structure(
         Ab, Bb, Mb, a_pattern=pattern(A), b_pattern=pattern(B),
         interpret=interpret, backend=backend)
+    return gather_mask_aligned(M, Mb, Cb.blocks, Sb.blocks, n=n, wm=wm)
 
+
+def gather_mask_aligned(M: CSR, Mb_struct, c_blocks, s_blocks, *, n: int,
+                        wm: Optional[int] = None) -> MaskedSpGEMMResult:
+    """Extract a mask-aligned result from block-granular values/counts.
+
+    ``c_blocks``/``s_blocks`` are ``(nnzb, bs, bs)`` device arrays laid out
+    in ``Mb_struct``'s block order (the 1P allocation: output structure ==
+    mask block structure).  The distributed ring does NOT come through
+    here — its extraction is panel-local inside the shard program.
+    """
+    m = M.shape[0]
+    bs = Mb_struct.block_size
     M_p = padded_from_csr(M, wm)
     pm = M_p.width
     # host-side addressing: every mask element lives in a mask block by
-    # construction (output structure == mask structure, the 1P allocation)
+    # construction
     mr = _expand_rows(M.indptr)
     mc = M.indices
-    pos = bcsr_block_positions(Mb, mr // bs, mc // bs)
+    pos = bcsr_block_positions(Mb_struct, mr // bs, mc // bs)
     slots = np.arange(M.nnz, dtype=np.int64) - M.indptr[mr]
     vals, present = _tile_gather(
-        Cb.blocks, Sb.blocks, jnp.asarray(pos), jnp.asarray(mr % bs),
+        c_blocks, s_blocks, jnp.asarray(pos), jnp.asarray(mr % bs),
         jnp.asarray(mc % bs), jnp.asarray(mr), jnp.asarray(slots),
         m=m, pm=pm)
     return MaskedSpGEMMResult(vals, present, M_p.cols, (m, n))

@@ -341,6 +341,139 @@ def decide(stats: PlanStats, *, allow_tile: bool = True) -> Plan:
 
 
 # ---------------------------------------------------------------------------
+# Distributed decision: row-parallel (replicate B) vs sparse ring-SUMMA
+# ---------------------------------------------------------------------------
+
+#: distributed cost-model constants (ms), CPU-calibrated against
+#: benchmarks/bench_dist.py (dist_grid.json) on the forced-host-device
+#: mesh: ``per_bcast_elem`` models replicating padded B to every device
+#: (the row route's setup traffic), ``per_ring_byte`` the ppermute volume
+#: of one rotating value+pattern slab panel per stage, ``stage_base`` the
+#: fixed per-stage dispatch overhead of the ring program.  Re-tune with
+#: ``python -m benchmarks.run --only dist`` (see ROADMAP).
+DIST_COST = dict(per_bcast_elem=1.5e-6, per_ring_byte=2.0e-7,
+                 stage_base=0.15)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Executable distributed decision for ``distributed_masked_spgemm``."""
+
+    route: str                    # "row" | "ring"
+    p: int                        # ring/mesh axis size
+    tile_block: int               # BCSR block size for the ring (0 = n/a)
+    row_algorithm: str            # row kernel if route == "row"
+    costs: Tuple[Tuple[str, float], ...]
+    stats: PlanStats
+
+    def cost(self, route: str) -> float:
+        return dict(self.costs)[route]
+
+
+def ring_cost(stats: PlanStats, p: int, bs: int) -> float:
+    """Modeled total ms of the sparse BCSR ring at ``p`` devices, block
+    size ``bs``: the tile route's host/mac/gather decomposition with the
+    MACs split ``p`` ways, plus ``p`` ppermute stages of the padded
+    value+pattern B slab panel."""
+    c = TILE_COST
+    d = DIST_COST
+    m, k, n = stats.m, stats.k, stats.n
+    dens_a = stats.nnz_a / max(1, m * k)
+    dens_b = stats.nnz_b / max(1, k * n)
+    dens_m = stats.nnz_m / max(1, m * n)
+    mb, kb, nb = -(-m // bs), -(-k // bs), -(-n // bs)
+    p_a = _block_occupancy(dens_a, bs)
+    p_b = _block_occupancy(dens_b, bs)
+    p_m = _block_occupancy(dens_m, bs)
+    m_blocks = mb * nb * p_m
+    b_blocks = kb * nb * p_b
+    worklist = m_blocks * kb * p_a * p_b + p * m_blocks  # + zero-fills/stage
+    host = c["per_host"] * (stats.nnz_a + stats.nnz_b + stats.nnz_m
+                            + worklist)
+    mac = c["per_mac"] * 2.0 * worklist * bs ** 3 / p   # values + structure
+    gather = c["per_gather"] * stats.nnz_m
+    # one padded slab panel (values + pattern blocks) moves per rotation;
+    # both ring implementations peel the final stage, so p stages transmit
+    # only p - 1 rotations (none at p = 1)
+    slab_bytes = (b_blocks / p) * bs * bs * 4.0 * 2.0
+    comm = d["per_ring_byte"] * slab_bytes * (p - 1) + d["stage_base"] * p
+    return c["base"] + host + mac + gather + comm
+
+
+def ring_block_candidates(m: int, k: int, n: int) -> Tuple[int, ...]:
+    """BCSR block sizes the ring/tile routes may use for an (m, k, n)
+    product, largest first — the single source the planner's cost scan and
+    the executors' defaults share."""
+    lo = max(8, min(m, k, n))
+    return tuple(bs for bs in TILE_BLOCK_SIZES if bs <= lo) \
+        or (TILE_BLOCK_SIZES[-1],)
+
+
+def _distributed_decision(stats: PlanStats, p: int
+                          ) -> Tuple[Tuple[Tuple[str, float], ...], str, int]:
+    """(costs, row_algorithm, ring tile_block) — each modeled exactly once.
+
+    The row route's setup traffic is the operand actually replicated:
+    padded B (k x wb) for the row-major kernels, padded B^T (n x wbt) when
+    the elected row kernel is Inner.
+    """
+    from repro.kernels.masked_matmul.ops import tile_path_supported
+    row_alg, row_compute = rank_algorithms(stats)[0]
+    repl_elems = (stats.n * stats.wbt if row_alg == "inner"
+                  else stats.k * stats.wb)
+    costs = [("row", row_compute / p + DIST_COST["per_bcast_elem"]
+              * repl_elems)]
+    tile_block = 0
+    if tile_path_supported(stats.semiring, stats.complement):
+        by_bs = {bs: ring_cost(stats, p, bs)
+                 for bs in ring_block_candidates(stats.m, stats.k, stats.n)}
+        tile_block = min(by_bs, key=by_bs.get)
+        costs.append(("ring", by_bs[tile_block]))
+    return (tuple(sorted(costs, key=lambda kv: (kv[1], kv[0]))),
+            row_alg, tile_block)
+
+
+def distributed_costs(stats: PlanStats, p: int
+                      ) -> Tuple[Tuple[str, float], ...]:
+    """(route, modeled ms) pairs for the mesh, cheapest first.  The ring
+    entry reports the best block size's cost; when the tile kernels cannot
+    express the product only the row route is listed."""
+    return _distributed_decision(stats, p)[0]
+
+
+def decide_distributed(stats: PlanStats, p: int) -> DistPlan:
+    """Pure distributed decision: statistics + mesh size -> DistPlan."""
+    costs, row_alg, tile_block = _distributed_decision(stats, p)
+    return DistPlan(
+        route=costs[0][0], p=p, tile_block=tile_block,
+        row_algorithm=row_alg, costs=costs, stats=stats)
+
+
+def plan_distributed(A: CSR, B: CSR, M: CSR, p: int, *,
+                     complement: bool = False,
+                     semiring: Semiring = PLUS_TIMES,
+                     use_cache: bool = True) -> DistPlan:
+    """Cached distributed decision: the mesh counterpart of ``plan``.
+
+    Keyed on the operands' structural signatures + ring size, sharing the
+    planner's LRU — repeated structures (the serving case) skip the
+    symbolic probe and the cost model entirely.
+    """
+    key = None
+    if use_cache:
+        key = (structure_signature(A), structure_signature(B),
+               structure_signature(M), p, complement, semiring.name, "dist")
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
+    stats = collect_stats(A, B, M, complement=complement, semiring=semiring)
+    d = decide_distributed(stats, p)
+    if use_cache:
+        _cache_put(key, d)
+    return d
+
+
+# ---------------------------------------------------------------------------
 # Measured trial: resolve modeled near-ties empirically (cached with the plan)
 # ---------------------------------------------------------------------------
 

@@ -61,8 +61,16 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
     At = adj.transpose()
     sources = np.arange(n) if sources is None else np.asarray(sources)
     b = len(sources)
-    backward_algorithm = backward_algorithm or (
-        algorithm if algorithm not in ("mca",) else "msa")
+    # the forward sweep runs under complement=True; hash/mca/inner cannot
+    # complement (paper Sec. 8.4) and would raise mid-sweep — coerce them to
+    # msa up front ("auto" plans the complement itself; msa/heap* pass
+    # through).  The backward sweep has a normal mask, so the caller's
+    # algorithm is fine there; its default only avoids inheriting a
+    # forward-coerced choice where the original works.
+    complement_capable = ("auto", "msa", "heap", "heapdot")
+    forward_algorithm = (algorithm if algorithm in complement_capable
+                         else "msa")
+    backward_algorithm = backward_algorithm or algorithm
 
     spgemm_time = 0.0
     calls = 0
@@ -83,7 +91,7 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             v_chunks, _ = _chunk_rows(visited, source_chunks)
             t0 = time.perf_counter()
             vals, present = masked_spgemm_batched(
-                f_chunks, adj, v_chunks, algorithm=algorithm,
+                f_chunks, adj, v_chunks, algorithm=forward_algorithm,
                 semiring=PLUS_TIMES, complement=True)
             spgemm_time += time.perf_counter() - t0
             vals = np.asarray(vals).reshape(-1, n)[:b]
@@ -93,7 +101,7 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             visited_mask = csr_from_dense(visited)
             t0 = time.perf_counter()
             vals, present = masked_spgemm(f_csr, adj, visited_mask,
-                                          algorithm=algorithm,
+                                          algorithm=forward_algorithm,
                                           semiring=PLUS_TIMES,
                                           complement=True,
                                           two_phase=two_phase)
@@ -136,7 +144,6 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
     # depth-0 wave (sources' own row) contributes no centrality
 
     bc = (bcu - 1.0).sum(axis=0)
-    bc[sources] -= 0.0                            # endpoints already excluded
     return bc / 2.0, spgemm_time, calls
 
 

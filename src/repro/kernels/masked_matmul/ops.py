@@ -160,6 +160,89 @@ def build_spgemm_schedule(A: BCSR, B: BCSR, M: BCSR) -> Schedule:
 
 
 # ---------------------------------------------------------------------------
+# K-slab schedules (distributed ring-SUMMA): one worklist per ring stage
+# ---------------------------------------------------------------------------
+
+
+def build_spgemm_schedule_slab(A: BCSR, B_slab: BCSR, M: BCSR,
+                               k0_blocks: int) -> Schedule:
+    """Worklist for C = M (.) (A[:, slab] @ B_slab), one ring stage.
+
+    ``B_slab`` holds block rows [k0_blocks, k0_blocks + B_slab.block_rows)
+    of the full B, rebased to start at 0 (its ``pb`` positions index the
+    slab's own blocks).  ``pa`` positions index the full panel ``A.blocks``.
+    Zero-fill semantics match ``build_spgemm_schedule``: every mask block
+    gets at least one entry, so a per-stage executor's output is fully
+    defined even for stages whose slab contributes nothing.
+    """
+    rows_slab = B_slab.block_rows
+    in_slab = (A.indices >= k0_blocks) & (A.indices < k0_blocks + rows_slab)
+    pos_map = np.nonzero(in_slab)[0]
+    brow = np.repeat(np.arange(A.block_rows, dtype=np.int64),
+                     np.diff(A.indptr))[in_slab]
+    indptr_sub = np.zeros(A.block_rows + 1, dtype=np.int64)
+    np.add.at(indptr_sub, brow + 1, 1)
+    A_sub = BCSR(np.cumsum(indptr_sub), A.indices[in_slab] - k0_blocks,
+                 A.blocks, (A.shape[0], rows_slab * A.block_size),
+                 A.block_size)
+    rank, pa, pb, flags = build_spgemm_schedule(A_sub, B_slab, M)
+    # remap pa from slab-filtered positions back to the full panel's blocks
+    # (zero-fill entries keep position 0 — they never contribute)
+    real = (flags >> 1) & 1
+    if len(pos_map):
+        pa = np.where(real == 1, pos_map[np.minimum(pa, len(pos_map) - 1)],
+                      0).astype(np.int32)
+    else:
+        pa = np.zeros_like(pa)
+    return rank, pa, pb, flags
+
+
+def build_ring_schedules(A_panels, B_slabs, M_panels, *, out_pad: int
+                         ) -> np.ndarray:
+    """Stacked per-device, per-stage worklists for the sparse ring.
+
+    Returns int32 ``(p, p, 4, Ws)``: ``[d, s]`` is the worklist
+    ``(rank, pa, pb, flags)`` device ``d`` replays at ring stage ``s``,
+    when it holds B K-slab ``(d - s) % p``.  All worklists are padded to
+    one static length ``Ws``:
+
+    * ranks ``[nnzb(M_panel), out_pad)`` (the ring-wide output padding) get
+      zero-fill entries (flags first|last, real off) so per-stage executors
+      that require every output rank to be written stay fully defined;
+    * trailing padding entries carry ``rank = out_pad - 1`` with all flags
+      off (no write, no contribution) so rank-sortedness is preserved.
+    """
+    p = len(A_panels)
+    assert len(B_slabs) == len(M_panels) == p
+    slab_rows = B_slabs[0].block_rows
+    scheds = {}
+    ws = 1
+    for d in range(p):
+        for s in range(p):
+            src = (d - s) % p
+            rank, pa, pb, flags = build_spgemm_schedule_slab(
+                A_panels[d], B_slabs[src], M_panels[d], src * slab_rows)
+            nloc = M_panels[d].nnzb
+            if out_pad > nloc:
+                extra = np.arange(nloc, out_pad, dtype=np.int32)
+                z = np.zeros(len(extra), np.int32)
+                rank = np.concatenate([rank, extra])
+                pa = np.concatenate([pa, z])
+                pb = np.concatenate([pb, z])
+                flags = np.concatenate([flags, np.full(len(extra), 5,
+                                                       np.int32)])
+            scheds[d, s] = (rank, pa, pb, flags)
+            ws = max(ws, len(rank))
+    out = np.zeros((p, p, 4, ws), np.int32)
+    out[:, :, 0, :] = max(0, out_pad - 1)
+    for (d, s), parts in scheds.items():
+        L = len(parts[0])
+        for i, arr in enumerate(parts):
+            out[d, s, i, :L] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Worklist executors
 # ---------------------------------------------------------------------------
 
@@ -222,9 +305,11 @@ def _run_schedule(A: BCSR, B: BCSR, M: BCSR, schedule: Schedule,
                   blocks_a, blocks_b, *, interpret, backend):
     bs = A.block_size
     if backend is None:
-        # an explicit interpret flag requests the pallas path (tests
-        # exercise the kernel in interpret mode on CPU)
-        backend = "pallas" if (interpret is not None or on_tpu()) else "xla"
+        # interpret=True requests the pallas path (tests exercise the kernel
+        # in interpret mode on CPU); interpret=False only means "compiled
+        # mode *if* pallas runs at all" — off-TPU it must still pick xla,
+        # never compiled-mode Mosaic on a host platform
+        backend = "pallas" if (interpret or on_tpu()) else "xla"
     # an empty operand leaves only zero-fill entries in the worklist, but
     # those still address block 0 — give them one zero block to read
     if blocks_a.shape[0] == 0:

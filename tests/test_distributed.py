@@ -23,3 +23,17 @@ def test_distributed_subprocess():
         capture_output=True, text=True, timeout=540, env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "DIST_ALL_OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_sparse_subprocess():
+    """Sparse BCSR ring-SUMMA vs the single-device driver and the dense
+    oracle, across mesh sizes {1, 2, 4, 8} on forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "dist_sparse_check.py")],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "DIST_SPARSE_ALL_OK" in proc.stdout

@@ -9,8 +9,9 @@ except ImportError:  # container has no hypothesis; deterministic fallback
 
 from repro.core.formats import (
     CSR, csr_from_dense, csr_from_coo, padded_from_csr, padded_from_dense,
-    bcsr_from_dense, bcsr_structure_transpose, erdos_renyi, rmat,
-    random_mask_like, tril,
+    bcsr_concat_row_panels, bcsr_from_csr, bcsr_from_dense,
+    bcsr_pad_block_rows, bcsr_row_panels, bcsr_structure_transpose,
+    erdos_renyi, pad_panel_blocks, rmat, random_mask_like, tril,
 )
 
 
@@ -107,3 +108,51 @@ def test_tril_and_mask():
     gd = g.to_dense() != 0
     md = m.to_dense() != 0
     assert (md & ~gd).sum() == 0  # mask pattern subset of g
+
+
+# --------------------------------------------------------------------------
+# BCSR panel helpers (distributed ring-SUMMA building blocks)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), m=st.integers(1, 40),
+       n=st.integers(1, 40), bs=st.sampled_from([4, 8]),
+       nparts=st.sampled_from([1, 2, 4]))
+def test_bcsr_panel_split_concat_roundtrip(seed, m, n, bs, nparts):
+    a = rand_dense(seed, m, n, 0.3)
+    b = bcsr_from_csr(csr_from_dense(a), bs)
+    padded = bcsr_pad_block_rows(b, -(-b.block_rows // nparts) * nparts)
+    panels = bcsr_row_panels(padded, nparts)
+    assert len(panels) == nparts
+    assert sum(p.nnzb for p in panels) == b.nnzb
+    back = bcsr_concat_row_panels(panels)
+    np.testing.assert_array_equal(back.indptr, padded.indptr)
+    np.testing.assert_array_equal(back.indices, padded.indices)
+    np.testing.assert_array_equal(np.asarray(back.blocks),
+                                  np.asarray(padded.blocks))
+    np.testing.assert_array_equal(back.to_dense()[:m, :n], a)
+
+
+def test_bcsr_pad_block_rows_is_structural_noop():
+    a = rand_dense(3, 20, 20, 0.3)
+    b = bcsr_from_csr(csr_from_dense(a), 8)
+    padded = bcsr_pad_block_rows(b, b.block_rows + 3)
+    assert padded.block_rows == b.block_rows + 3
+    assert padded.nnzb == b.nnzb
+    np.testing.assert_array_equal(padded.to_dense()[:20, :20], a)
+    with pytest.raises(ValueError):
+        bcsr_pad_block_rows(b, b.block_rows - 1)
+
+
+def test_pad_panel_blocks_static_shape():
+    a = rand_dense(4, 16, 16, 0.4)
+    b = bcsr_from_csr(csr_from_dense(a), 8)
+    padded = pad_panel_blocks(b.blocks, b.nnzb + 5)
+    assert padded.shape == (b.nnzb + 5, 8, 8)
+    np.testing.assert_array_equal(np.asarray(padded[:b.nnzb]),
+                                  np.asarray(b.blocks))
+    assert np.abs(np.asarray(padded[b.nnzb:])).sum() == 0.0
+    # empty in, at-least-one-block out (ppermute needs nonzero extents)
+    empty = bcsr_from_csr(csr_from_dense(np.zeros((8, 8), np.float32)), 8)
+    assert pad_panel_blocks(empty.blocks, 0).shape == (1, 8, 8)

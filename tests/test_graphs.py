@@ -83,6 +83,19 @@ def test_triangle_on_rmat():
     assert got == want
 
 
+@pytest.mark.parametrize("algorithm", ["mca", "hash", "inner"])
+def test_betweenness_complement_incapable_algorithms(algorithm):
+    """Regression: the forward sweep runs under complement=True, which
+    hash/mca/inner cannot do — they used to raise NotImplementedError
+    mid-sweep.  They must be coerced up front and produce correct BC."""
+    g = random_graph(6, n=25, p=0.2)
+    bc, _, calls = betweenness_centrality(nx_to_csr(g), algorithm=algorithm)
+    want = nx.betweenness_centrality(g, normalized=False)
+    for v in want:
+        assert abs(bc[v] - want[v]) < 1e-3, (v, bc[v], want[v])
+    assert calls > 0
+
+
 def test_betweenness_chunked_sources_matches_unchunked():
     """source_chunks routes through masked_spgemm_batched (one plan per
     depth); results must match the per-call path exactly."""

@@ -215,3 +215,72 @@ def test_plan_batch_widens_to_batch_maxima():
     p = plan_batch(As, B, Ms)
     assert p.widths[0] == max(int(np.diff(a.indptr).max()) for a in As)
     assert p.widths[2] == max(int(np.diff(m.indptr).max()) for m in Ms)
+
+
+# ---- distributed decision: row-parallel vs sparse ring --------------------
+
+
+def test_decide_distributed_lists_and_ranks_routes():
+    from repro.core.planner import decide_distributed, distributed_costs
+    s = stats()
+    for p in (2, 4, 8):
+        d = decide_distributed(s, p)
+        assert d.route in ("row", "ring")
+        assert d.p == p and d.tile_block in (8, 32, 128)
+        names = [name for name, _ in d.costs]
+        assert "row" in names and "ring" in names
+        vals = [c for _, c in d.costs]
+        assert vals == sorted(vals)
+        assert distributed_costs(s, p) == d.costs
+
+
+def test_decide_distributed_respects_tile_support():
+    """Non-plus_times or complemented products cannot ride the ring: the
+    decision must fall back to the row route and not even list ring."""
+    from repro.core.planner import decide_distributed
+    for bad in (stats(semiring="min_plus"), stats(complement=True)):
+        d = decide_distributed(bad, 4)
+        assert d.route == "row"
+        assert [name for name, _ in d.costs] == ["row"]
+        assert d.tile_block == 0
+
+
+def test_decide_distributed_prefers_ring_when_b_is_huge():
+    """A B too fat to replicate (huge padded width) must push auto off the
+    row route: replication bytes scale with k * wb while the ring only
+    moves occupied slabs."""
+    from repro.core.planner import decide_distributed
+    s = stats(m=4096, k=4096, n=4096, nnz_a=4096 * 410, nnz_b=4096 * 410,
+              nnz_m=4096 * 410, wa=512, wb=4096, wbt=4096, pm=512)
+    d = decide_distributed(s, 8)
+    assert d.cost("ring") < d.cost("row")
+    assert d.route == "ring"
+
+
+def test_slab_schedules_partition_the_full_schedule():
+    """Per-slab worklists must partition the full schedule's real entries:
+    same total MAC count, same per-rank contribution counts."""
+    from repro.core.formats import (bcsr_from_csr, bcsr_pad_block_rows,
+                                    bcsr_row_panels)
+    from repro.kernels.masked_matmul.ops import (build_spgemm_schedule,
+                                                 build_spgemm_schedule_slab)
+    rng = np.random.default_rng(31)
+    dense = lambda m, n, d: ((rng.random((m, n)) < d) * 1.0
+                             ).astype(np.float32)
+    A = bcsr_from_csr(csr_from_dense(dense(40, 48, 0.2)), 8)
+    B = bcsr_from_csr(csr_from_dense(dense(48, 40, 0.2)), 8)
+    M = bcsr_from_csr(csr_from_dense(dense(40, 40, 0.4)), 8)
+    rank, _, _, flags = build_spgemm_schedule(A, B, M)
+    want = np.bincount(rank[((flags >> 1) & 1) == 1], minlength=M.nnzb)
+    p = 4
+    slabs = bcsr_row_panels(
+        bcsr_pad_block_rows(B, -(-B.block_rows // p) * p), p)
+    rows_per = slabs[0].block_rows
+    got = np.zeros(M.nnzb, np.int64)
+    for s, slab in enumerate(slabs):
+        r, pa, pb, fl = build_spgemm_schedule_slab(A, slab, M, s * rows_per)
+        real = ((fl >> 1) & 1) == 1
+        got += np.bincount(r[real], minlength=M.nnzb)
+        assert (np.diff(r) >= 0).all()        # rank-sorted per stage
+        assert pb.max(initial=0) <= max(0, slab.nnzb - 1)
+    np.testing.assert_array_equal(got, want)

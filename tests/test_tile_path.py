@@ -115,6 +115,22 @@ def test_xla_and_pallas_executors_agree():
                                   np.asarray(pallas.blocks))
 
 
+def test_interpret_false_off_tpu_routes_to_xla():
+    """Regression: ``interpret=False`` with the default backend used to be
+    read as "pallas, compiled mode" — which crashes off-TPU (Mosaic cannot
+    target the host platform).  An explicit non-interpret request off-TPU
+    must fall through to the XLA executor and agree with it bitwise."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU routing test")
+    rng = np.random.default_rng(21)
+    A = bcsr_from_csr(csr_from_dense(int_sparse(rng, 24, 24, 0.3)), 8)
+    M = bcsr_from_csr(csr_from_dense(int_sparse(rng, 24, 24, 0.5)), 8)
+    got = block_spgemm(A, A, M, interpret=False)       # backend=None
+    want = block_spgemm(A, A, M, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got.blocks),
+                                  np.asarray(want.blocks))
+
+
 def test_on_tpu_tracks_backend_changes(monkeypatch):
     """The executor choice must be re-derived per call: a module-global
     cache of the first backend probe silently ran compiled-mode kernels in
@@ -252,6 +268,39 @@ def test_planner_elected_tile_dispatches_and_matches():
     np.testing.assert_array_equal(np.asarray(auto.to_dense()),
                                   np.asarray(msa.to_dense()))
     np.testing.assert_array_equal(np.asarray(auto.present),
+                                  np.asarray(msa.present))
+
+
+def test_two_phase_forced_tile_raises():
+    """two_phase has no meaning on the tile route; a forced tile request
+    must fail loudly instead of silently ignoring the flag."""
+    rng = np.random.default_rng(23)
+    Ac = csr_from_dense(int_sparse(rng, 16, 16, 0.3))
+    Mc = csr_from_dense(np.ones((16, 16), np.float32))
+    with pytest.raises(NotImplementedError):
+        masked_spgemm(Ac, Ac, Mc, algorithm="tile", tile_block=8,
+                      two_phase=True)
+
+
+def test_two_phase_auto_elected_tile_falls_back_to_row_kernel():
+    """When auto elects the tile route but the caller asked for two_phase,
+    the driver must fall back to the plan's best row kernel — and still
+    return the row kernels' exact result."""
+    clear_plan_cache()
+    rng = np.random.default_rng(24)
+    n = 256
+    A = int_sparse(rng, n, n, 0.15)
+    B = int_sparse(rng, n, n, 0.15)
+    M = (rng.random((n, n)) < 0.5).astype(np.float32)
+    Ac, Bc, Mc = csr_from_dense(A), csr_from_dense(B), csr_from_dense(M)
+    p = plan(Ac, Bc, Mc)
+    if p.algorithm != "tile":
+        pytest.skip("planner did not elect tile on this machine")
+    out = masked_spgemm(Ac, Bc, Mc, algorithm="auto", two_phase=True)
+    msa = masked_spgemm(Ac, Bc, Mc, algorithm="msa")
+    np.testing.assert_array_equal(np.asarray(out.to_dense()),
+                                  np.asarray(msa.to_dense()))
+    np.testing.assert_array_equal(np.asarray(out.present),
                                   np.asarray(msa.present))
 
 

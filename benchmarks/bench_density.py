@@ -7,21 +7,12 @@ when inputs are much sparser than the mask; MSA/Hash in between.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.formats import erdos_renyi, csr_from_coo
+from repro.core.formats import erdos_renyi, er_mask  # noqa: F401 (er_mask
+# re-exported: bench_planner/bench_tile and older scripts import it here)
 from repro.core.masked_spgemm import masked_spgemm
 from .common import timeit, save
 
 ALGOS = ("msa", "hash", "mca", "heap", "heapdot", "inner")
-
-
-def er_mask(n, d, seed):
-    rng = np.random.default_rng(seed)
-    nnz = rng.poisson(d, size=n)
-    rows = np.repeat(np.arange(n, dtype=np.int64), nnz)
-    cols = rng.integers(0, n, size=int(nnz.sum()), dtype=np.int64)
-    return csr_from_coo(rows, cols, np.ones(len(rows), np.float32), (n, n))
 
 
 def run(n: int = 1024, degrees=(2, 8, 32), mask_degrees=(2, 8, 32),

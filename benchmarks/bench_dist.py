@@ -46,26 +46,15 @@ def _child(n: int, mesh_sizes, densities_b, iters: int) -> None:
     from repro.core.distributed import (distributed_masked_spgemm,
                                         ring_masked_matmul,
                                         ring_sparse_masked_spgemm)
-    from repro.core.formats import csr_from_dense, erdos_renyi
+    from repro.core.formats import block_sparse, csr_from_dense, erdos_renyi
     from repro.core.planner import collect_stats, decide_distributed
     from .common import save, timeit
 
     bs = 32
 
-    def block_sparse(seed, td, within=0.9, mask=False):
-        r = np.random.default_rng(seed)
-        nb = n // bs
-        tiles = r.random((nb, nb)) < td
-        if not tiles.any():
-            tiles[0, 0] = True
-        dense = np.kron(tiles, np.ones((bs, bs))) * (r.random((n, n))
-                                                     < within)
-        if mask:
-            return dense.astype(np.float32)
-        return (dense * r.integers(1, 5, (n, n))).astype(np.float32)
-
-    points = [(f"block_tdb{td}", block_sparse(1, 0.1),
-               block_sparse(2, td), block_sparse(3, 0.2, 1.0, mask=True),
+    points = [(f"block_tdb{td}", block_sparse(n, bs, 0.1, 0.9, seed=1),
+               block_sparse(n, bs, td, 0.9, seed=2),
+               block_sparse(n, bs, 0.2, 1.0, seed=3, mask=True),
                td) for td in densities_b]
     # uniform-ER control: no block structure, the row route must win and
     # the planner must keep the ring unelected

@@ -25,7 +25,8 @@ import argparse
 
 import numpy as np
 
-from repro.core.formats import csr_from_dense, erdos_renyi
+from repro.core.formats import (block_sparse,  # noqa: F401 (re-exported)
+                                csr_from_dense, erdos_renyi)
 from repro.core.masked_spgemm import ALGORITHMS, masked_spgemm
 from repro.core.planner import clear_plan_cache, plan
 from .bench_density import er_mask
@@ -34,21 +35,6 @@ from .common import save, timeit
 #: a point where auto elected "tile" fails if tile is slower than
 #: (1 + this) x the best row kernel
 PICK_TOLERANCE = 0.10
-
-
-def block_sparse(n, bs, tile_density, within_density, seed, mask=False):
-    """Block-structured sparse matrix: tiles occupied w.p. ``tile_density``,
-    elements inside an occupied tile w.p. ``within_density``."""
-    rng = np.random.default_rng(seed)
-    nb = n // bs
-    tiles = rng.random((nb, nb)) < tile_density
-    if not tiles.any():
-        tiles[0, 0] = True
-    dense = np.kron(tiles, np.ones((bs, bs))) * (rng.random((n, n))
-                                                 < within_density)
-    if mask:
-        return dense.astype(np.float32)
-    return (dense * rng.integers(1, 5, (n, n))).astype(np.float32)
 
 
 def _time_point(A, B, M, bs, iters):

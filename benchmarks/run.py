@@ -22,9 +22,22 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + 1 iteration (CI smoke job)")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of: {', '.join(ORDER)}")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a bench reports a False acceptance "
+                         "flag (its _-prefixed booleans, e.g. _all_ok)")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else set(ORDER)
+    if args.only:
+        only = {name.strip() for name in args.only.split(",")
+                if name.strip()}
+        unknown = sorted(only - set(ORDER))
+        if unknown or not only:
+            raise SystemExit(
+                f"benchmarks.run: unknown --only job names {unknown}; "
+                f"valid names: {', '.join(ORDER)}")
+    else:
+        only = set(ORDER)
 
     from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
                    bench_ktruss, bench_planner, bench_rmat_scale,
@@ -63,9 +76,17 @@ def main() -> None:
         print(f"\n===== bench: {name} =====", flush=True)
         t0 = time.time()
         try:
-            jobs[name]()
-            print(f"===== {name} done in {time.time() - t0:.1f}s =====",
-                  flush=True)
+            table = jobs[name]()
+            bad_flags = [k for k, v in table.items()
+                         if k.startswith("_") and v is False] \
+                if isinstance(table, dict) else []
+            if args.strict and bad_flags:
+                failures.append(f"{name}:{','.join(bad_flags)}")
+                print(f"===== {name} FAILED acceptance flags "
+                      f"{bad_flags} =====", flush=True)
+            else:
+                print(f"===== {name} done in {time.time() - t0:.1f}s =====",
+                      flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()

@@ -3,8 +3,8 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers: the adaptive planner (``algorithm="auto"``, the default), the six
-fixed algorithms, semirings, complemented masks, the block/tile path, and
-triangle counting.
+fixed algorithms, semirings, complemented masks, the block/tile path,
+backend calibration profiles, and triangle counting.
 """
 import numpy as np
 
@@ -98,7 +98,29 @@ def main():
                                        algorithm="ring", block_size=8)
     print("sparse ring nnz(C) =", int(forced.nnz))
 
-    # --- 6. a real application: triangle counting --------------------------
+    # --- 6. calibrating the planner for YOUR backend ------------------------
+    # Every decision above was priced by cost tables fit on the reference
+    # CPU container.  On other hardware, don't hand-tune them — fit them:
+    #
+    #   PYTHONPATH=src python -m repro.tune            # full probe grids
+    #   PYTHONPATH=src python -m repro.tune --smoke    # minute-scale fit
+    #   PYTHONPATH=src python -m repro.tune --only row,tile,dist
+    #
+    # That times the row kernels / tile route / distributed routes on small
+    # synthetic grids, solves the planner's cost models for their constants
+    # (reporting fit residuals), and registers the profile under
+    # results/profiles/ keyed by backend signature.  Install one with
+    # ``repro.tuning.activate(profile)`` in-process, or export
+    # ``REPRO_TUNE_PROFILE=/path/to/profile.json`` for whole process trees
+    # (benchmarks, CI).  Activation can never serve stale decisions: plan
+    # caches are keyed by the active profile's version token.
+    from repro.tuning import active_version, lookup
+    prof, exact = lookup()     # this backend's profile (default fallback)
+    print(f"calibration: active={active_version()!r} "
+          f"registry={prof.name!r} (exact={exact}, "
+          f"version={prof.version})")
+
+    # --- 7. a real application: triangle counting --------------------------
     g = erdos_renyi(512, 8, seed=1)
     tri, secs = triangle_count(g, algorithm="msa")
     print(f"triangles = {tri} ({secs * 1e3:.0f} ms masked-SpGEMM time)")

@@ -7,16 +7,17 @@ from .distributed import (distributed_masked_spgemm, ring_masked_matmul,
 from .masked_spgemm import (ALGORITHMS, MaskedSpGEMMResult, dense_oracle,
                             masked_spgemm, masked_spgemm_batched)
 from .planner import (DistPlan, Plan, PlanStats, clear_plan_cache,
-                      collect_stats, decide, decide_distributed,
-                      distributed_costs, plan, plan_batch, plan_cache_info,
-                      plan_distributed, rank_algorithms)
+                      collect_stats, cost_model_token, decide,
+                      decide_distributed, distributed_costs, plan,
+                      plan_batch, plan_cache_info, plan_distributed,
+                      rank_algorithms)
 
 __all__ = [
     "ALGORITHMS", "MaskedSpGEMMResult", "dense_oracle", "masked_spgemm",
     "masked_spgemm_batched", "distributed_masked_spgemm",
     "ring_masked_matmul", "ring_sparse_masked_spgemm",
     "row_parallel_masked_spgemm", "DistPlan", "Plan", "PlanStats",
-    "clear_plan_cache", "collect_stats", "decide", "decide_distributed",
-    "distributed_costs", "plan", "plan_batch", "plan_cache_info",
-    "plan_distributed", "rank_algorithms",
+    "clear_plan_cache", "collect_stats", "cost_model_token", "decide",
+    "decide_distributed", "distributed_costs", "plan", "plan_batch",
+    "plan_cache_info", "plan_distributed", "rank_algorithms",
 ]

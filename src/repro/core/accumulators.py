@@ -370,8 +370,14 @@ def symbolic_row(m_cols, a_cols, a_len, B_cols, B_lens, n: int, kdim: int):
 # constants are tunable (see ROADMAP "Open items" for the re-calibration
 # procedure against BENCH_density / the rmat suite).
 
-#: Calibration constants, fit to benchmarks/bench_density.py (n=1024 ER grid)
-#: plus skewed R-MAT and dense-mask probes on the CPU backend.
+#: Calibration constants — SHIPPED CPU defaults, fit to
+#: benchmarks/bench_density.py (n=1024 ER grid) plus skewed R-MAT and
+#: dense-mask probes.  On other backends don't hand-edit: ``python -m
+#: repro.tune`` measures the kernels and refits these (and TILE_COST /
+#: DIST_COST / the tile gates) into a CalibrationProfile, and
+#: ``repro.tuning.activate`` installs it here in place.  The planner keys
+#: its plan caches on a fingerprint of these tables, so any change —
+#: activation or manual mutation — invalidates previously cached plans.
 COST_CONSTANTS = {
     # dense (n+1)-wide state init/gather + wa sequential scatter rounds
     "msa": dict(base=12.0, per_n=0.035, per_flop=0.25, per_mask=0.5),
@@ -394,50 +400,82 @@ def _log2(x: float) -> float:
     return math.log2(max(2.0, float(x)))
 
 
-def msa_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["msa"]
-    return (c["base"] + c["per_n"] * (n + 1)
-            + c["per_flop"] * wa * wb + c["per_mask"] * pm)
+# Each model is LINEAR in its constants: cost = sum_k c[k] * feature_k.
+# The feature functions below are that decomposition, shared between the
+# hooks (dot with COST_CONSTANTS) and the calibration fit in
+# ``repro.tuning.fit`` (least squares over the same features) — one
+# functional form, two readers, no way to drift apart.
 
 
-def hash_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["hash"]
-    return (c["base"] + c["per_flop"] * wa * wb
-            + c["per_mask"] * pm + c["per_slot"] * _hash_size(max(1, pm)))
+def _msa_features(*, n, wa, wb, wbt, pm):
+    # dense (n+1)-wide state init/gather + wa sequential scatter rounds
+    return {"base": 1.0, "per_n": float(n + 1), "per_flop": float(wa * wb),
+            "per_mask": float(pm)}
 
 
-def mca_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["mca"]
-    return c["base"] + c["per_merge"] * wa * wb * _log2(pm + 2)
+def _hash_features(*, n, wa, wb, wbt, pm):
+    # table build is a sequential probe loop over mask nonzeros; probing
+    # inside the flop loop is a while-loop per batch of wb queries
+    return {"base": 1.0, "per_flop": float(wa * wb), "per_mask": float(pm),
+            "per_slot": float(_hash_size(max(1, pm)))}
 
 
-def heap_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["heap"]
+def _mca_features(*, n, wa, wb, wbt, pm):
+    # wa merge rounds of wb searchsorted lookups into the pm-long mask row
+    return {"base": 1.0, "per_merge": wa * wb * _log2(pm + 2)}
+
+
+def _heap_features(*, n, wa, wb, wbt, pm):
+    # sort of the wa*wb expansion + segmented reduce + mask alignment
     e = wa * wb
-    return c["base"] + c["per_sort"] * e * _log2(e + 2) + c["per_mask"] * pm
+    return {"base": 1.0, "per_sort": e * _log2(e + 2), "per_mask": float(pm)}
 
 
-def heapdot_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["heapdot"]
+def _heapdot_features(*, n, wa, wb, wbt, pm):
     e = wa * wb
-    return (c["base"] + c["per_sort"] * e * _log2(e + 2)
-            + c["per_mask"] * pm + c["per_inspect"] * e * _log2(pm + 2))
+    return {"base": 1.0, "per_sort": e * _log2(e + 2), "per_mask": float(pm),
+            "per_inspect": e * _log2(pm + 2)}
 
 
-def inner_cost(*, n, wa, wb, wbt, pm):
-    c = COST_CONSTANTS["inner"]
-    return c["base"] + c["per_dot"] * pm * wa * _log2(wbt + 2)
+def _inner_features(*, n, wa, wb, wbt, pm):
+    # one vmapped sparse dot per mask nonzero (no sequential flop loop);
+    # the base is the host-side B^T transpose+pad paid every call
+    return {"base": 1.0, "per_dot": pm * wa * _log2(wbt + 2)}
+
+
+#: algorithm name -> feature decomposition of its cost model
+COST_FEATURES = {
+    "msa": _msa_features,
+    "hash": _hash_features,
+    "mca": _mca_features,
+    "heap": _heap_features,
+    "heapdot": _heapdot_features,
+    "inner": _inner_features,
+}
+
+
+def _make_cost_hook(name):
+    features = COST_FEATURES[name]
+
+    def hook(*, n, wa, wb, wbt, pm):
+        c = COST_CONSTANTS[name]
+        f = features(n=n, wa=wa, wb=wb, wbt=wbt, pm=pm)
+        return sum(c[k] * f[k] for k in f)
+
+    hook.__name__ = f"{name}_cost"
+    return hook
 
 
 #: algorithm name -> cost hook; keys mirror masked_spgemm.ALGORITHMS
-COST_HOOKS = {
-    "msa": msa_cost,
-    "hash": hash_cost,
-    "mca": mca_cost,
-    "heap": heap_cost,
-    "heapdot": heapdot_cost,
-    "inner": inner_cost,
-}
+COST_HOOKS = {name: _make_cost_hook(name) for name in COST_FEATURES}
+
+# named aliases, kept for direct callers
+msa_cost = COST_HOOKS["msa"]
+hash_cost = COST_HOOKS["hash"]
+mca_cost = COST_HOOKS["mca"]
+heap_cost = COST_HOOKS["heap"]
+heapdot_cost = COST_HOOKS["heapdot"]
+inner_cost = COST_HOOKS["inner"]
 
 #: algorithms whose row kernels accept ``complement=True`` (paper Sec. 8.4:
 #: hash/MCA/inner require an explicit mask)

@@ -26,7 +26,10 @@ naturally across a mesh:
 host CSR operands plus a mesh and elects row-parallel vs the sparse ring
 via the planner's distributed cost model (replication bytes vs ring volume
 vs per-stage tile cost), mirroring ``masked_spgemm(algorithm="auto")`` on
-one device.
+one device.  The model's ``DIST_COST`` constants are per-backend
+calibration data: ``python -m repro.tune --only dist`` refits them from
+measured ring/row probes (forced host devices stand in for a real
+network, so refit on the actual mesh before trusting auto at scale).
 
 All device programs are pure ``shard_map``: they lower and compile for any
 mesh (including the 512-chip production mesh) and are exercised by the

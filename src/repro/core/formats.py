@@ -492,6 +492,44 @@ def random_mask_like(a: CSR, keep_prob: float, seed: int = 0) -> CSR:
                         a.shape, sum_dups=False)
 
 
+def er_mask(n: int, d: float, seed: int) -> CSR:
+    """ER-pattern mask: ~Poisson(d) ones per row at uniform columns.
+
+    The mask family of the paper's Fig. 7 density sweep; shared by the
+    benchmarks and the calibration probes so both measure the same
+    distribution.
+    """
+    rng = np.random.default_rng(seed)
+    nnz = rng.poisson(d, size=n)
+    rows = np.repeat(np.arange(n, dtype=np.int64), nnz)
+    cols = rng.integers(0, n, size=int(nnz.sum()), dtype=np.int64)
+    return csr_from_coo(rows, cols, np.ones(len(rows), np.float32), (n, n))
+
+
+def block_sparse(n: int, bs: int, tile_density: float,
+                 within_density: float, seed: int,
+                 mask: bool = False) -> np.ndarray:
+    """Block-structured sparse matrix as a DENSE (n, n) float32 array:
+    (bs x bs) tiles occupied w.p. ``tile_density``, elements inside an
+    occupied tile w.p. ``within_density``; integer values in [1, 5)
+    unless ``mask`` (then 0/1).
+
+    The tile/ring routes' calibration family; shared by bench_tile,
+    bench_dist, and the tuning probes — the draw order is part of the
+    committed grids' identity, so change it only with a regeneration.
+    """
+    rng = np.random.default_rng(seed)
+    nb = n // bs
+    tiles = rng.random((nb, nb)) < tile_density
+    if not tiles.any():
+        tiles[0, 0] = True
+    dense = np.kron(tiles, np.ones((bs, bs))) * (rng.random((n, n))
+                                                 < within_density)
+    if mask:
+        return dense.astype(np.float32)
+    return (dense * rng.integers(1, 5, (n, n))).astype(np.float32)
+
+
 def tril(a: CSR, strict: bool = True) -> CSR:
     rows = _expand_rows(a.indptr)
     keep = a.indices < rows if strict else a.indices <= rows

@@ -125,8 +125,10 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
 
     ``algorithm="auto"`` (the default) consults the planner: cheap
     structural statistics pick the cheapest kernel per the paper's Sec. 7-8
-    guidelines, memoized by structural signature so repeated shapes skip
-    re-planning.  When the plan elects the BCSR tile route
+    guidelines, memoized by structural signature (plus the active
+    cost-model token — retuning or activating a calibration profile via
+    ``repro.tuning`` / ``python -m repro.tune`` re-plans everything) so
+    repeated shapes skip re-planning.  When the plan elects the BCSR tile route
     (``plan.algorithm == "tile"``), the product executes on the block
     executors (Pallas on TPU, compiled XLA elsewhere) end to end — no
     densify anywhere on that path.  ``algorithm="tile"`` forces the tile

@@ -48,6 +48,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.tuning import profile as tuning_profile
+
 from . import accumulators as acc
 from .formats import CSR, PaddedCSR
 from .semiring import Semiring, PLUS_TIMES
@@ -97,7 +99,12 @@ TILE_MIN_HIT_RATE = 0.05
 #: benchmarks/bench_tile.py like COST_CONSTANTS: host covers the
 #: bcsr_from_csr scatters + vectorized schedule build (per element/worklist
 #: entry), mac the batched block products of the two device replays
-#: (values + structure), gather the per-mask-element result extraction
+#: (values + structure), gather the per-mask-element result extraction.
+#: Like every constant table in this module, these are the SHIPPED CPU
+#: defaults: ``repro.tuning.activate(profile)`` overwrites them in place
+#: from a fitted CalibrationProfile (``python -m repro.tune``), and the
+#: plan caches key on ``cost_model_token()`` so retuning never serves a
+#: plan decided under old constants.
 TILE_COST = dict(base=3.0, per_host=2.5e-4, per_mac=1.6e-7,
                  per_gather=3.0e-4)
 
@@ -283,16 +290,12 @@ def _block_occupancy(dens: float, bs: int) -> float:
     return float(-np.expm1(bs * bs * np.log1p(-min(dens, 1 - 1e-12))))
 
 
-def tile_cost(stats: PlanStats, bs: int) -> float:
-    """Modeled total ms of the BCSR tile route at block size ``bs``.
-
-    Random-occupancy model: expected occupied blocks per operand, expected
-    worklist length (mask blocks x expected block-row/block-col
-    intersection), then the same host/device/extract decomposition the
-    route actually executes.  Units match the row-kernel hooks (total ms
-    at stats scale) so the planner can rank them side by side.
-    """
-    c = TILE_COST
+def _block_counts(stats: PlanStats, bs: int
+                  ) -> Tuple[float, float, float]:
+    """Random-occupancy block expectations shared by the tile and ring
+    models: ``(m_blocks, b_blocks, pair)`` — expected occupied output/mask
+    blocks, occupied B blocks, and expected worklist entries per mask
+    block (block-row/block-col intersection)."""
     m, k, n = stats.m, stats.k, stats.n
     dens_a = stats.nnz_a / max(1, m * k)
     dens_b = stats.nnz_b / max(1, k * n)
@@ -301,13 +304,38 @@ def tile_cost(stats: PlanStats, bs: int) -> float:
     p_a = _block_occupancy(dens_a, bs)
     p_b = _block_occupancy(dens_b, bs)
     p_m = _block_occupancy(dens_m, bs)
-    m_blocks = mb * nb * p_m
-    worklist = m_blocks * kb * p_a * p_b
-    host = c["per_host"] * (stats.nnz_a + stats.nnz_b + stats.nnz_m
-                            + worklist)
-    mac = c["per_mac"] * 2.0 * worklist * bs ** 3   # values + structure
-    gather = c["per_gather"] * stats.nnz_m
-    return c["base"] + host + mac + gather
+    return mb * nb * p_m, kb * nb * p_b, kb * p_a * p_b
+
+
+def _tile_feature_dict(stats: PlanStats, worklist: float, bs: int,
+                       mac_div: float) -> Dict[str, float]:
+    """The host/mac/gather decomposition both block routes execute, as a
+    TILE_COST feature vector (``mac_div`` splits the MACs across ring
+    devices; 1 on a single device)."""
+    return {
+        "base": 1.0,
+        "per_host": float(stats.nnz_a + stats.nnz_b + stats.nnz_m
+                          + worklist),
+        "per_mac": 2.0 * worklist * bs ** 3 / mac_div,  # values + structure
+        "per_gather": float(stats.nnz_m),
+    }
+
+
+def tile_cost_features(stats: PlanStats, bs: int) -> Dict[str, float]:
+    """Feature vector of the tile-route model: ``tile_cost`` is the dot
+    product of this with ``TILE_COST`` (the calibration fit solves the
+    same linear form for the constants, so model and fit cannot drift).
+    """
+    m_blocks, _, pair = _block_counts(stats, bs)
+    return _tile_feature_dict(stats, m_blocks * pair, bs, 1.0)
+
+
+def tile_cost(stats: PlanStats, bs: int) -> float:
+    """Modeled total ms of the BCSR tile route at block size ``bs``.
+    Units match the row-kernel hooks (total ms at stats scale) so the
+    planner can rank them side by side."""
+    f = tile_cost_features(stats, bs)
+    return sum(TILE_COST[k] * f[k] for k in f)
 
 
 def decide(stats: PlanStats, *, allow_tile: bool = True) -> Plan:
@@ -370,34 +398,34 @@ class DistPlan:
         return dict(self.costs)[route]
 
 
-def ring_cost(stats: PlanStats, p: int, bs: int) -> float:
-    """Modeled total ms of the sparse BCSR ring at ``p`` devices, block
-    size ``bs``: the tile route's host/mac/gather decomposition with the
-    MACs split ``p`` ways, plus ``p`` ppermute stages of the padded
-    value+pattern B slab panel."""
-    c = TILE_COST
-    d = DIST_COST
-    m, k, n = stats.m, stats.k, stats.n
-    dens_a = stats.nnz_a / max(1, m * k)
-    dens_b = stats.nnz_b / max(1, k * n)
-    dens_m = stats.nnz_m / max(1, m * n)
-    mb, kb, nb = -(-m // bs), -(-k // bs), -(-n // bs)
-    p_a = _block_occupancy(dens_a, bs)
-    p_b = _block_occupancy(dens_b, bs)
-    p_m = _block_occupancy(dens_m, bs)
-    m_blocks = mb * nb * p_m
-    b_blocks = kb * nb * p_b
-    worklist = m_blocks * kb * p_a * p_b + p * m_blocks  # + zero-fills/stage
-    host = c["per_host"] * (stats.nnz_a + stats.nnz_b + stats.nnz_m
-                            + worklist)
-    mac = c["per_mac"] * 2.0 * worklist * bs ** 3 / p   # values + structure
-    gather = c["per_gather"] * stats.nnz_m
+def ring_cost_features(stats: PlanStats, p: int, bs: int
+                       ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """``(tile_features, comm_features)`` of the sparse-ring model:
+    ``ring_cost`` dots the first with ``TILE_COST`` and the second with
+    ``DIST_COST`` (the calibration fit reuses both).
+
+    The tile part is the tile route's host/mac/gather decomposition with
+    the MACs split ``p`` ways; the comm part is ``p`` ppermute stages of
+    the padded value+pattern B slab panel.
+    """
+    m_blocks, b_blocks, pair = _block_counts(stats, bs)
+    worklist = m_blocks * pair + p * m_blocks  # + zero-fills/stage
+    tile_f = _tile_feature_dict(stats, worklist, bs, float(p))
     # one padded slab panel (values + pattern blocks) moves per rotation;
     # both ring implementations peel the final stage, so p stages transmit
     # only p - 1 rotations (none at p = 1)
     slab_bytes = (b_blocks / p) * bs * bs * 4.0 * 2.0
-    comm = d["per_ring_byte"] * slab_bytes * (p - 1) + d["stage_base"] * p
-    return c["base"] + host + mac + gather + comm
+    comm_f = {"per_ring_byte": slab_bytes * (p - 1),
+              "stage_base": float(p)}
+    return tile_f, comm_f
+
+
+def ring_cost(stats: PlanStats, p: int, bs: int) -> float:
+    """Modeled total ms of the sparse BCSR ring at ``p`` devices, block
+    size ``bs``."""
+    tile_f, comm_f = ring_cost_features(stats, p, bs)
+    return (sum(TILE_COST[k] * tile_f[k] for k in tile_f)
+            + sum(DIST_COST[k] * comm_f[k] for k in comm_f))
 
 
 def ring_block_candidates(m: int, k: int, n: int) -> Tuple[int, ...]:
@@ -409,20 +437,23 @@ def ring_block_candidates(m: int, k: int, n: int) -> Tuple[int, ...]:
         or (TILE_BLOCK_SIZES[-1],)
 
 
+def row_replication_elems(stats: PlanStats, row_alg: str) -> float:
+    """Elements of B the row route replicates to every device: padded B
+    (k x wb) for the row-major kernels, padded B^T (n x wbt) when the
+    elected row kernel is Inner.  Shared with the calibration fit (the
+    ``per_bcast_elem`` feature)."""
+    return float(stats.n * stats.wbt if row_alg == "inner"
+                 else stats.k * stats.wb)
+
+
 def _distributed_decision(stats: PlanStats, p: int
                           ) -> Tuple[Tuple[Tuple[str, float], ...], str, int]:
     """(costs, row_algorithm, ring tile_block) — each modeled exactly once.
-
-    The row route's setup traffic is the operand actually replicated:
-    padded B (k x wb) for the row-major kernels, padded B^T (n x wbt) when
-    the elected row kernel is Inner.
     """
     from repro.kernels.masked_matmul.ops import tile_path_supported
     row_alg, row_compute = rank_algorithms(stats)[0]
-    repl_elems = (stats.n * stats.wbt if row_alg == "inner"
-                  else stats.k * stats.wb)
     costs = [("row", row_compute / p + DIST_COST["per_bcast_elem"]
-              * repl_elems)]
+              * row_replication_elems(stats, row_alg))]
     tile_block = 0
     if tile_path_supported(stats.semiring, stats.complement):
         by_bs = {bs: ring_cost(stats, p, bs)
@@ -462,7 +493,8 @@ def plan_distributed(A: CSR, B: CSR, M: CSR, p: int, *,
     key = None
     if use_cache:
         key = (structure_signature(A), structure_signature(B),
-               structure_signature(M), p, complement, semiring.name, "dist")
+               structure_signature(M), p, complement, semiring.name, "dist",
+               cost_model_token())
         hit = _cache_get(key)
         if hit is not None:
             return hit
@@ -566,6 +598,25 @@ def _crc(a: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
+def cost_model_token() -> str:
+    """Identity of the cost model every cached Plan was decided under.
+
+    Combines the active calibration profile's version token with a
+    fingerprint of the LIVE constant tables, so both ``repro.tuning.
+    activate`` and the legacy hand-retune workflow (mutating
+    ``COST_CONSTANTS`` / ``TILE_COST`` / ``DIST_COST`` / the gates in
+    place) change every plan-cache key — a plan decided under old
+    constants is never served after a retune.
+    """
+    fp = tuning_profile.fingerprint_tables(
+        acc.COST_CONSTANTS, TILE_COST,
+        {"min_density": TILE_MIN_DENSITY,
+         "min_occupancy": TILE_MIN_OCCUPANCY,
+         "min_hit_rate": TILE_MIN_HIT_RATE},
+        DIST_COST)
+    return f"{tuning_profile.active_version()}-{fp}"
+
+
 def structure_signature(x) -> tuple:
     """Structural identity of an operand: equal signatures => equal sparsity
     structure (up to CRC collision), values ignored."""
@@ -622,7 +673,8 @@ def plan(A, B, M, *, complement: bool = False,
     key = None
     if use_cache:
         key = (structure_signature(A), structure_signature(B),
-               structure_signature(M), complement, semiring.name)
+               structure_signature(M), complement, semiring.name,
+               cost_model_token())
         hit = _cache_get(key)
         if hit is not None:
             return hit
@@ -669,7 +721,7 @@ def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
     key = (tuple(structure_signature(a) for a in As),
            structure_signature(B),
            tuple(structure_signature(m) for m in Ms),
-           complement, semiring.name, "batch")
+           complement, semiring.name, "batch", cost_model_token())
     hit = _cache_get(key)
     if hit is not None:
         return hit
@@ -699,3 +751,12 @@ def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
 
     _cache_put(key, p)
     return p
+
+
+# A fitted calibration profile named by $REPRO_TUNE_PROFILE is installed
+# as soon as the planner exists (this module's tables are the ones it
+# overwrites), so benchmarks, CI jobs, and the distributed bench's child
+# interpreters all run under the same fitted constants without code
+# changes.  Errors propagate: a calibration that silently failed to apply
+# would invalidate every measurement made under it.
+tuning_profile.activate_from_env()

@@ -1,0 +1,8 @@
+"""``python -m repro.tune``: fit this backend's planner calibration
+profile (probe -> least-squares fit -> registry).  See
+``repro/tuning/cli.py`` for the flags and ``repro/tuning/__init__.py``
+for the subsystem overview."""
+from repro.tuning.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Backend calibration subsystem: fit the planner's cost model, don't
+hand-tune it.
+
+    python -m repro.tune --smoke            # fit a quick profile, register it
+    python -m repro.tune --only row,tile    # re-fit selected families
+    python -m repro.tune --out my.json      # fit without touching the registry
+
+The pipeline: :mod:`repro.tuning.probes` times the row kernels, the BCSR
+tile route, and the distributed row/ring routes on small synthetic grids
+(the same generators the benchmarks use, sized for minutes); :mod:`repro.
+tuning.fit` solves the existing cost-hook functional forms for their
+constants by weighted non-negative least squares with a prior toward the
+shipped values; the result is a :class:`~repro.tuning.profile.
+CalibrationProfile` registered under ``results/profiles/`` by backend
+signature and installed with :func:`activate` (or the ``REPRO_TUNE_
+PROFILE`` env var for child processes).
+
+This ``__init__`` must stay import-light: ``repro.core.planner`` imports
+``repro.tuning.profile`` at module top, which executes this file first —
+so probes/fit/cli (which import the core) load lazily via __getattr__.
+"""
+from __future__ import annotations
+
+from .profile import (BUILTIN_VERSION, CalibrationProfile, ProfileError,
+                      activate, activate_from_env, active_profile,
+                      active_version, backend_signature, lookup,
+                      profile_dir, profile_key, profile_path, register,
+                      snapshot)
+
+__all__ = [
+    "BUILTIN_VERSION", "CalibrationProfile", "ProfileError", "activate",
+    "activate_from_env", "active_profile", "active_version",
+    "backend_signature", "lookup", "profile_dir", "profile_key",
+    "profile_path", "register", "snapshot",
+    # lazy submodules
+    "probes", "fit", "cli",
+]
+
+_LAZY_SUBMODULES = ("probes", "fit", "cli")
+
+
+def __getattr__(name):
+    if name in _LAZY_SUBMODULES:
+        import importlib
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

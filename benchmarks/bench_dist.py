@@ -134,8 +134,8 @@ def run(n: int = 2048, mesh_sizes=(2, 4, 8),
         env=env, timeout=3600)
     if proc.returncode != 0:
         raise RuntimeError(f"bench_dist child failed: {proc.returncode}")
-    from .common import RESULTS_DIR
-    with open(os.path.join(RESULTS_DIR, "dist_grid.json")) as f:
+    from .common import results_dir
+    with open(os.path.join(results_dir(), "dist_grid.json")) as f:
         return json.load(f)
 
 

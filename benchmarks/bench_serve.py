@@ -1,0 +1,211 @@
+"""Serving-layer load generator: batched engine vs sequential one-shot.
+
+Drives ``repro.serving.QueryEngine`` with the query streams a deployment
+sees and writes ``results/bench/serve_grid.json``:
+
+* ``burst``  — a same-structure burst (one operand structure, fresh values
+  per query): the bucket case.  Acceptance: engine throughput >= 3x the
+  sequential one-shot loop AND every served result bitwise-equal to the
+  one-shot oracle (``_serve_batching_wins``).
+* ``mix``    — several structures shuffled together: bucketing must
+  reassemble them (queries-per-second vs sequential, per-bucket sizes).
+* ``cold``   — first-query latency from empty caches vs a warm query.
+* ``replay`` — the exact stream twice: second pass must be ~all result
+  cache hits.
+
+Sequential baseline and engine both run warm (plans cached, programs
+compiled) and both block until results are ready — the measured difference
+is dispatch/batching, which is the serving layer's whole claim.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro import caches
+from repro.core.formats import CSR, erdos_renyi, er_mask
+from repro.core.masked_spgemm import masked_spgemm
+from repro.core.planner import clear_plan_cache
+from repro.serving import QueryEngine
+
+from .common import save
+
+#: batched engine must beat sequential one-shot by this factor on the burst
+BATCHING_WIN = 3.0
+
+
+def _revalue(x: CSR, seed: int) -> CSR:
+    """Same structure, fresh values — a query against a shared pattern."""
+    rng = np.random.default_rng(seed)
+    return CSR(x.indptr, x.indices,
+               rng.uniform(0.5, 1.5, x.nnz).astype(np.float32), x.shape)
+
+
+def _burst_structure(n: int):
+    """Sparse inputs + dense mask: the mca/msa regime, where the serving
+    layer's structure-compiled replay pays off hardest (plan election is
+    what routes the bucket onto it — nothing is forced)."""
+    return (erdos_renyi(n, 2, seed=100), erdos_renyi(n, 2, seed=200),
+            er_mask(n, max(8, n // 8), seed=300))
+
+
+def _structures(n: int, n_structs: int):
+    """Mixed regimes: burst-eligible scatter plans plus inner-elected ER
+    points that stay on the batched row driver."""
+    out = [_burst_structure(n)]
+    for s in range(1, n_structs):
+        out.append((erdos_renyi(n, 2 + 2 * s, seed=100 + s),
+                    erdos_renyi(n, 2 + 2 * s, seed=200 + s),
+                    er_mask(n, 8 * s, seed=300 + s)))
+    return out
+
+
+def _sequential(queries) -> List:
+    return [masked_spgemm(A, B, M) for A, B, M in queries]
+
+
+def _engine_serve(engine: QueryEngine, queries) -> List:
+    tickets = [engine.submit(A, B, M) for A, B, M in queries]
+    engine.flush()
+    return [t.result() for t in tickets]
+
+
+def _bitwise_equal(got, want) -> bool:
+    return (np.array_equal(np.asarray(got.vals), np.asarray(want.vals))
+            and np.array_equal(np.asarray(got.present),
+                               np.asarray(want.present))
+            and np.array_equal(np.asarray(got.mask_cols),
+                               np.asarray(want.mask_cols)))
+
+
+def _block(results) -> None:
+    for r in results:
+        r.vals.block_until_ready()
+
+
+def run(n: int = 512, queries: int = 48, n_structs: int = 4,
+        max_batch: int = 64, iters: int = 3):
+    table = {}
+
+    # ---- burst: one structure, fresh values per query ---------------------
+    A0, B0, M0 = _burst_structure(n)
+    burst = [(_revalue(A0, 1000 + q), B0, M0) for q in range(queries)]
+
+    engine = QueryEngine(max_batch=max_batch, queue_cap=4 * max_batch,
+                         cache_results=False)
+    _block(_sequential(burst))            # warm: plan + compile both paths
+    _block(_engine_serve(engine, burst))
+
+    t_seq = min(_timed(lambda: _block(_sequential(burst)), iters))
+    t_eng = min(_timed(lambda: _block(_engine_serve(engine, burst)), iters))
+    want = _sequential(burst)
+    got = _engine_serve(engine, burst)
+    bitwise_ok = all(_bitwise_equal(g, w) for g, w in zip(got, want))
+    ratio = t_seq / max(t_eng, 1e-12)
+    log = engine.metrics.bucket_log()
+    table["burst"] = {
+        "n": n, "queries": queries,
+        "seq_s": t_seq, "engine_s": t_eng, "speedup": ratio,
+        "seq_qps": queries / t_seq, "engine_qps": queries / t_eng,
+        "bitwise_equal": bitwise_ok,
+        "route": log[-1]["route"] if log else None,
+        "algorithm": log[-1]["algorithm"] if log else None,
+        "metrics": engine.metrics.snapshot(),
+    }
+    print(f"[serve] burst   n={n} q={queries}: seq {t_seq*1e3:7.1f}ms "
+          f"engine {t_eng*1e3:7.1f}ms  speedup {ratio:.2f}x "
+          f"route={table['burst']['route']} "
+          f"bitwise={'OK' if bitwise_ok else 'FAIL'}", flush=True)
+    engine.close()
+
+    # ---- mix: shuffled multi-structure stream -----------------------------
+    structs = _structures(n, n_structs)
+    rng = np.random.default_rng(0)
+    mix = []
+    for q in range(queries):
+        A, B, M = structs[int(rng.integers(n_structs))]
+        mix.append((_revalue(A, 2000 + q), B, M))
+
+    engine = QueryEngine(max_batch=max_batch, queue_cap=4 * max_batch,
+                         cache_results=False)
+    _block(_sequential(mix))
+    _block(_engine_serve(engine, mix))
+    t_seq_mix = min(_timed(lambda: _block(_sequential(mix)), iters))
+    t_eng_mix = min(_timed(lambda: _block(_engine_serve(engine, mix)),
+                           iters))
+    want = _sequential(mix)
+    got = _engine_serve(engine, mix)
+    mix_bitwise = all(_bitwise_equal(g, w) for g, w in zip(got, want))
+    snap = engine.metrics.snapshot()
+    table["mix"] = {
+        "n": n, "queries": queries, "structures": n_structs,
+        "seq_s": t_seq_mix, "engine_s": t_eng_mix,
+        "speedup": t_seq_mix / max(t_eng_mix, 1e-12),
+        "mean_batch": snap["mean_batch"], "bitwise_equal": mix_bitwise,
+        "metrics": snap,
+    }
+    print(f"[serve] mix     n={n} q={queries} s={n_structs}: "
+          f"seq {t_seq_mix*1e3:7.1f}ms engine {t_eng_mix*1e3:7.1f}ms "
+          f"speedup {table['mix']['speedup']:.2f}x "
+          f"mean_batch {snap['mean_batch']:.1f} "
+          f"bitwise={'OK' if mix_bitwise else 'FAIL'}", flush=True)
+    engine.close()
+
+    # ---- cold start: first query from empty caches ------------------------
+    caches.clear_all()
+    clear_plan_cache()
+    engine = QueryEngine(max_batch=max_batch)
+    q0 = burst[0]
+    t0 = time.perf_counter()
+    engine.serve([q0])
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.serve([(_revalue(A0, 1), B0, M0)])   # warm: same structure
+    warm_s = time.perf_counter() - t0
+    table["cold"] = {"cold_s": cold_s, "warm_s": warm_s,
+                     "ratio": cold_s / max(warm_s, 1e-12)}
+    print(f"[serve] cold    first {cold_s*1e3:.1f}ms vs warm "
+          f"{warm_s*1e3:.1f}ms", flush=True)
+
+    # ---- replay: identical stream twice -> result-cache hits --------------
+    replay = burst[: max(8, queries // 2)]
+    engine.results.clear()
+    engine.metrics.reset()
+    first = _engine_serve(engine, replay)
+    t0 = time.perf_counter()
+    second = _engine_serve(engine, replay)
+    replay_s = time.perf_counter() - t0
+    hits = engine.metrics.snapshot()["result_cache_hits"]
+    replay_ok = (hits == len(replay)
+                 and all(_bitwise_equal(g, w)
+                         for g, w in zip(second, first)))
+    table["replay"] = {"queries": len(replay), "cache_hits": hits,
+                      "second_pass_s": replay_s,
+                      "cache_info": engine.results.info(),
+                      "_replay_all_hits": replay_ok}
+    print(f"[serve] replay  {hits}/{len(replay)} cache hits, second pass "
+          f"{replay_s*1e3:.1f}ms", flush=True)
+    engine.close()
+
+    table["_serve_batching_wins"] = bool(ratio >= BATCHING_WIN
+                                         and bitwise_ok)
+    table["_bitwise_ok"] = bool(bitwise_ok and mix_bitwise)
+    print(f"[serve] batching_wins={table['_serve_batching_wins']} "
+          f"(speedup {ratio:.2f}x vs bar {BATCHING_WIN}x)", flush=True)
+    save("serve_grid", table)
+    return table
+
+
+def _timed(fn, iters: int) -> List[float]:
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+if __name__ == "__main__":
+    run()

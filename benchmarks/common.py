@@ -8,7 +8,13 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+def results_dir() -> str:
+    """Output directory, resolved per call: ``benchmarks.run --smoke``
+    redirects to a scratch dir via $REPRO_BENCH_OUT so smoke tiers never
+    clobber the committed full-tier grids.  (Deliberately NOT an
+    import-time constant — a snapshot taken before run.py sets the env
+    var would re-introduce the clobbering.)"""
+    return os.environ.get("REPRO_BENCH_OUT", "results/bench")
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
@@ -24,8 +30,9 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
 
 
 def save(name: str, payload) -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    out = results_dir()
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     return path

@@ -10,10 +10,12 @@ Roofline (needs results/dryrun from repro.launch.dryrun):
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
 import time
 import traceback
 
-ORDER = ("density", "planner", "tile", "dist", "triangle", "rmat",
+ORDER = ("density", "planner", "tile", "dist", "serve", "triangle", "rmat",
          "scaling", "ktruss", "bc", "block")
 
 
@@ -21,13 +23,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes + 1 iteration (CI smoke job)")
+                    help="tiny sizes + 1 iteration (CI smoke job); writes "
+                         "to a scratch dir so the committed full-tier "
+                         "grids under results/bench/ survive")
     ap.add_argument("--only", default="",
                     help=f"comma-separated subset of: {', '.join(ORDER)}")
     ap.add_argument("--strict", action="store_true",
                     help="fail when a bench reports a False acceptance "
                          "flag (its _-prefixed booleans, e.g. _all_ok)")
     args = ap.parse_args()
+    if args.smoke and not os.environ.get("REPRO_BENCH_OUT"):
+        # smoke tiers must never clobber the committed full-tier grids
+        # (dist_grid.json/tile_grid.json are calibration artifacts); the
+        # env var also reaches bench_dist's forced-device child process
+        os.environ["REPRO_BENCH_OUT"] = tempfile.mkdtemp(
+            prefix="repro-bench-smoke-")
+        print(f"[smoke] writing results to "
+              f"{os.environ['REPRO_BENCH_OUT']} (committed results/bench/ "
+              f"untouched)", flush=True)
     if args.only:
         only = {name.strip() for name in args.only.split(",")
                 if name.strip()}
@@ -41,7 +54,7 @@ def main() -> None:
 
     from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
                    bench_ktruss, bench_planner, bench_rmat_scale,
-                   bench_scaling, bench_tile, bench_triangle)
+                   bench_scaling, bench_serve, bench_tile, bench_triangle)
     if args.smoke:
         density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
                           iters=3)
@@ -49,6 +62,7 @@ def main() -> None:
                        mask_occupancies=(0.5,), iters=1)
         dist_kw = dict(n=256, mesh_sizes=(2, 4), densities_b=(0.02, 0.3),
                        iters=1)
+        serve_kw = dict(n=128, queries=16, n_structs=2, iters=2)
     else:
         density_kw = dict(n=2048 if args.full else 1024)
         tile_kw = dict(n=512)
@@ -56,11 +70,14 @@ def main() -> None:
         # the default tier trims the grid like its neighbors do
         dist_kw = dict() if args.full else dict(n=1024, mesh_sizes=(2, 4),
                                                 densities_b=(0.02, 0.3))
+        serve_kw = dict(n=1024 if args.full else 512,
+                        queries=96 if args.full else 48)
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
         "planner": lambda: bench_planner.run(**density_kw),
         "tile": lambda: bench_tile.run(**tile_kw),
         "dist": lambda: bench_dist.run(**dist_kw),
+        "serve": lambda: bench_serve.run(**serve_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

@@ -38,7 +38,6 @@ dry-run and the forced-multi-device CPU harness in ``tests/``.
 from __future__ import annotations
 
 import functools
-from collections import OrderedDict
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -46,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import caches
 from repro.compat import shard_map
 
 from .formats import CSR, PaddedCSR, bcsr_row_panels, padded_from_csr
@@ -341,9 +341,10 @@ def _struct_panels(indptr: np.ndarray, indices: np.ndarray, p: int, bs: int,
 #: (CRC signatures) + block size + ring size: schedules, scatter
 #: coordinates, and extraction addressing are all structure-pure, so
 #: repeated structures (the serving case; every plan-cache hit) skip
-#: straight to the value scatter + device program
-_ring_prep_cache: "OrderedDict[tuple, dict]" = OrderedDict()
-_RING_PREP_CAPACITY = 32
+#: straight to the value scatter + device program.  Capacity:
+#: $REPRO_RING_PREP_CAP or ``repro.caches.set_capacity("ring-prep", n)``.
+_ring_prep_cache = caches.LRUCache("ring-prep", 32,
+                                   env_var="REPRO_RING_PREP_CAP")
 
 
 def _ring_prep(A: CSR, B: CSR, M: CSR, bs: int, p: int,
@@ -355,7 +356,6 @@ def _ring_prep(A: CSR, B: CSR, M: CSR, bs: int, p: int,
            structure_signature(M), bs, p, wm)
     hit = _ring_prep_cache.get(key)
     if hit is not None:
-        _ring_prep_cache.move_to_end(key)
         return hit
 
     m, k = A.shape
@@ -405,15 +405,16 @@ def _ring_prep(A: CSR, B: CSR, M: CSR, bs: int, p: int,
         ex_rowl=panelized(mr - m_pan * rows_loc, rows_loc),
         ex_slot=panelized(slots, 0),
         mask_cols=M_p.cols, pm=M_p.width)
-    _ring_prep_cache[key] = prep
-    if len(_ring_prep_cache) > _RING_PREP_CAPACITY:
-        _ring_prep_cache.popitem(last=False)
+    _ring_prep_cache.put(key, prep)
     return prep
 
 
 def clear_ring_prep_cache() -> None:
-    global _ring_prep_cache
-    _ring_prep_cache = OrderedDict()
+    _ring_prep_cache.clear()
+
+
+def ring_prep_cache_info() -> dict:
+    return _ring_prep_cache.info()
 
 
 def ring_sparse_masked_spgemm(A: CSR, B: CSR, M: CSR, mesh: Mesh, *,
@@ -573,6 +574,13 @@ def distributed_masked_spgemm(A: CSR, B: CSR, M: CSR, mesh: Mesh, *,
 # ---------------------------------------------------------------------------
 # helpers for building sharded problems
 # ---------------------------------------------------------------------------
+
+
+# the compiled shard_map programs are lru_cache-bounded; registering them
+# lets ``repro.caches.clear_all()`` drop compiled state in one sweep
+caches.register_lru("dist-row-program", _row_parallel_program)
+caches.register_lru("dist-dense-ring-program", _ring_dense_program)
+caches.register_lru("dist-sparse-ring-program", _ring_sparse_program)
 
 
 def pad_rows_to(mesh_axis_size: int, *mats: PaddedCSR) -> Tuple[PaddedCSR, ...]:

@@ -310,7 +310,28 @@ def gather_mask_aligned(M: CSR, Mb_struct, c_blocks, s_blocks, *, n: int,
 
 def _stack_padded(mats, width: int) -> PaddedCSR:
     """Pad each CSR to ``width`` and stack into a batched PaddedCSR whose
-    leaves carry a leading batch dim (vmap slices it back off)."""
+    leaves carry a leading batch dim (vmap slices it back off).
+
+    Host-CSR batches are padded into ONE host array per leaf and
+    transferred once — stacking per-element device arrays costs a
+    dispatch per element, which is exactly the overhead batching exists
+    to remove (the serving engine's hot path)."""
+    if all(isinstance(m, CSR) for m in mats):
+        b = len(mats)
+        m_rows, n = mats[0].shape
+        cols = np.full((b, m_rows, width), n, dtype=np.int32)
+        vals = np.zeros((b, m_rows, width), dtype=np.float32)
+        lens = np.zeros((b, m_rows), dtype=np.int32)
+        for i, mat in enumerate(mats):
+            mat = mat.sorted_rows()
+            rows = _expand_rows(mat.indptr)
+            slots = np.arange(mat.nnz, dtype=np.int64) - mat.indptr[rows]
+            keep = slots < width
+            cols[i, rows[keep], slots[keep]] = mat.indices[keep]
+            vals[i, rows[keep], slots[keep]] = mat.data[keep]
+            lens[i] = np.minimum(mat.row_nnz(), width)
+        return PaddedCSR(jnp.asarray(cols), jnp.asarray(vals),
+                         jnp.asarray(lens), (m_rows, n))
     padded = [m if isinstance(m, PaddedCSR) else padded_from_csr(m, width)
               for m in mats]
     return PaddedCSR(
@@ -343,6 +364,18 @@ def masked_spgemm_batched(As, B, Ms, *, algorithm: str = "auto",
         from .planner import plan_batch
         plan = plan_batch(As, B, Ms, complement=complement,
                           semiring=semiring)
+    if plan is not None and plan.algorithm == "tile":
+        # a tile-elected plan (the serving engine hands these in) executes
+        # each element on the block executors: the compiled executor is
+        # shared across the batch (jit cache), the plan across every call
+        from repro.kernels.masked_matmul.ops import tile_path_supported
+        if not tile_path_supported(semiring.name, complement):
+            raise NotImplementedError(
+                "tile route requires plus_times and an explicit mask")
+        return [_masked_spgemm_tile(a, B, mm,
+                                    block_size=plan.tile_block or None,
+                                    wm=plan.widths[2])
+                for a, mm in zip(As, Ms)]
     if plan is not None:
         algorithm = plan.algorithm
         wa, wb, wm = plan.widths

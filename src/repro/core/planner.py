@@ -43,11 +43,11 @@ from __future__ import annotations
 import dataclasses
 import threading
 import zlib
-from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import caches
 from repro.tuning import profile as tuning_profile
 
 from . import accumulators as acc
@@ -522,6 +522,10 @@ def _trial_candidates(p: Plan) -> Tuple[str, ...]:
 #: pay for at most one trial per shape class, not one per iteration
 _trial_winners: Dict[tuple, str] = {}
 _TRIAL_MEMO_CAPACITY = 256
+caches.register("planner-trials",
+                clear=_trial_winners.clear,
+                size=lambda: len(_trial_winners),
+                capacity=lambda: _TRIAL_MEMO_CAPACITY)
 
 
 def _shape_class(s: PlanStats) -> tuple:
@@ -587,11 +591,12 @@ def _refine_with_trial(A: CSR, B: CSR, M: CSR, p: Plan,
 # Plan cache (structural-signature LRU)
 # ---------------------------------------------------------------------------
 
+#: default plan-cache entries; override with $REPRO_PLAN_CACHE_CAP or
+#: ``repro.caches.set_capacity("planner-plans", n)``
 _CACHE_CAPACITY = 128
-_cache: "OrderedDict[tuple, Plan]" = OrderedDict()
+_cache = caches.LRUCache("planner-plans", _CACHE_CAPACITY,
+                         env_var="REPRO_PLAN_CACHE_CAP")
 _cache_lock = threading.Lock()
-_cache_hits = 0
-_cache_misses = 0
 
 
 def _crc(a: np.ndarray) -> int:
@@ -630,37 +635,37 @@ def structure_signature(x) -> tuple:
 
 
 def plan_cache_info() -> Dict[str, int]:
-    with _cache_lock:
-        return {"hits": _cache_hits, "misses": _cache_misses,
-                "size": len(_cache), "capacity": _CACHE_CAPACITY}
+    return _cache.info()
 
 
 def clear_plan_cache() -> None:
-    global _cache_hits, _cache_misses
+    _cache.clear()
     with _cache_lock:
-        _cache.clear()
         _trial_winners.clear()
-        _cache_hits = 0
-        _cache_misses = 0
 
 
 def _cache_get(key) -> Optional[Plan]:
-    global _cache_hits
-    with _cache_lock:
-        hit = _cache.get(key)
-        if hit is not None:
-            _cache.move_to_end(key)
-            _cache_hits += 1
-        return hit
+    return _cache.get(key)
 
 
 def _cache_put(key, p: Plan) -> None:
-    global _cache_misses
-    with _cache_lock:
-        _cache_misses += 1
-        _cache[key] = p
-        if len(_cache) > _CACHE_CAPACITY:
-            _cache.popitem(last=False)
+    _cache.put(key, p)
+
+
+#: serializes plan construction per key stripe: concurrent misses on the
+#: SAME structure (async serving submitters racing the worker) must
+#: resolve to ONE plan — the measured trial is load-dependent, so two
+#: racing trials can elect different near-tied kernels and the stream
+#: would mix plans that the one-shot path (reading the finally-cached
+#: plan) never saw.  Striped so one structure's trial (tens of ms) does
+#: not convoy unrelated structures' planning.
+_PLAN_LOCK_STRIPES = 16
+_plan_build_locks = tuple(threading.Lock()
+                          for _ in range(_PLAN_LOCK_STRIPES))
+
+
+def _plan_build_lock(key) -> threading.Lock:
+    return _plan_build_locks[hash(key) % _PLAN_LOCK_STRIPES]
 
 
 def plan(A, B, M, *, complement: bool = False,
@@ -670,58 +675,72 @@ def plan(A, B, M, *, complement: bool = False,
     ``A``/``B``/``M`` are host ``CSR`` (the common entry); ``PaddedCSR``
     operands are planned from their static widths without a probe.
     """
-    key = None
-    if use_cache:
-        key = (structure_signature(A), structure_signature(B),
-               structure_signature(M), complement, semiring.name,
-               cost_model_token())
-        hit = _cache_get(key)
+    def build() -> Plan:
+        if isinstance(A, CSR) and isinstance(B, CSR) and isinstance(M, CSR):
+            stats = collect_stats(A, B, M, complement=complement,
+                                  semiring=semiring)
+        else:  # device-resident operands: widths are already static
+            m, k = A.shape
+            _, n = B.shape
+            stats = PlanStats(
+                m=m, k=k, n=n,
+                nnz_a=m * A.width if isinstance(A, PaddedCSR) else A.nnz,
+                nnz_b=(B.shape[0] * B.width if isinstance(B, PaddedCSR)
+                       else B.nnz),
+                nnz_m=m * M.width if isinstance(M, PaddedCSR) else M.nnz,
+                wa=A.width if isinstance(A, PaddedCSR) else _max_row_nnz(A),
+                wb=B.width if isinstance(B, PaddedCSR) else _max_row_nnz(B),
+                wbt=B.width if isinstance(B, PaddedCSR) else _max_col_nnz(B),
+                pm=M.width if isinstance(M, PaddedCSR) else _max_row_nnz(M),
+                complement=complement, semiring=semiring.name,
+                b_transposable=not isinstance(B, PaddedCSR))
+        p = decide(stats)
+        if (not complement and stats.m >= TRIAL_MIN_ROWS
+                and isinstance(A, CSR) and isinstance(B, CSR)
+                and isinstance(M, CSR)):
+            p = _refine_with_trial(A, B, M, p, semiring)
+        return p
+
+    if not use_cache:
+        return build()
+    key = (structure_signature(A), structure_signature(B),
+           structure_signature(M), complement, semiring.name,
+           cost_model_token())
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+    # double-checked build: concurrent misses on one structure (async
+    # serving) must all observe the SAME plan — racing measured trials can
+    # elect different near-tied kernels
+    with _plan_build_lock(key):
+        hit = _cache.peek(key)
         if hit is not None:
             return hit
-
-    if isinstance(A, CSR) and isinstance(B, CSR) and isinstance(M, CSR):
-        stats = collect_stats(A, B, M, complement=complement,
-                              semiring=semiring)
-    else:  # device-resident operands: widths are already static
-        m, k = A.shape
-        _, n = B.shape
-        stats = PlanStats(
-            m=m, k=k, n=n,
-            nnz_a=m * A.width if isinstance(A, PaddedCSR) else A.nnz,
-            nnz_b=B.shape[0] * B.width if isinstance(B, PaddedCSR) else B.nnz,
-            nnz_m=m * M.width if isinstance(M, PaddedCSR) else M.nnz,
-            wa=A.width if isinstance(A, PaddedCSR) else _max_row_nnz(A),
-            wb=B.width if isinstance(B, PaddedCSR) else _max_row_nnz(B),
-            wbt=B.width if isinstance(B, PaddedCSR) else _max_col_nnz(B),
-            pm=M.width if isinstance(M, PaddedCSR) else _max_row_nnz(M),
-            complement=complement, semiring=semiring.name,
-            b_transposable=not isinstance(B, PaddedCSR))
-    p = decide(stats)
-    if (not complement and stats.m >= TRIAL_MIN_ROWS
-            and isinstance(A, CSR) and isinstance(B, CSR)
-            and isinstance(M, CSR)):
-        p = _refine_with_trial(A, B, M, p, semiring)
-
-    if use_cache:
+        p = build()
         _cache_put(key, p)
     return p
 
 
 def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
                complement: bool = False,
-               semiring: Semiring = PLUS_TIMES) -> Plan:
+               semiring: Semiring = PLUS_TIMES,
+               allow_tile: bool = False) -> Plan:
     """One Plan for a batch of same-shape operands sharing B.
 
     Statistics come from the first (A, M) pair; pad widths are widened to
     the batch maxima so a single compiled program fits every element.  The
-    cache key covers the whole batch's structure.
+    cache key covers the whole batch's structure.  ``allow_tile=True`` lets
+    the tile route into the ranking: the batched driver now serves it
+    per-element on the shared block executor (the serving engine's case);
+    the default keeps batches on the single vmapped row program.
     """
     if not As or len(As) != len(Ms):
         raise ValueError("batch needs equal-length non-empty As/Ms")
     key = (tuple(structure_signature(a) for a in As),
            structure_signature(B),
            tuple(structure_signature(m) for m in Ms),
-           complement, semiring.name, "batch", cost_model_token())
+           complement, semiring.name, "batch", allow_tile,
+           cost_model_token())
     hit = _cache_get(key)
     if hit is not None:
         return hit
@@ -745,9 +764,9 @@ def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,
     stats = dataclasses.replace(
         stats, wa=max(width(a) for a in As), pm=max(width(m) for m in Ms),
         b_transposable=not isinstance(B, PaddedCSR))
-    # the batched driver compiles ONE vmapped row program for the whole
-    # batch; the tile route has no batched form yet
-    p = decide(stats, allow_tile=False)
+    # one vmapped row program serves the whole batch; the tile route only
+    # enters when the caller can execute it per element (serving engine)
+    p = decide(stats, allow_tile=allow_tile)
 
     _cache_put(key, p)
     return p

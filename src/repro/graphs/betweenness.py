@@ -42,8 +42,8 @@ def _chunk_rows(dense: np.ndarray, chunks: int):
 def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
                            *, algorithm: str = "auto",
                            backward_algorithm: Optional[str] = None,
-                           two_phase: bool = False, source_chunks: int = 1
-                           ) -> Tuple[np.ndarray, float, int]:
+                           two_phase: bool = False, source_chunks: int = 1,
+                           engine=None) -> Tuple[np.ndarray, float, int]:
     """Returns (bc values (n,), masked-spgemm seconds, #spgemm calls).
 
     ``adj``: symmetric 0/1 adjacency (undirected), no self-loops.
@@ -53,10 +53,22 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
     plan and one vmapped program per depth instead of a dispatch per chunk
     (the paper's multi-source batching, Sec. 8.4).
     Unnormalized, endpoints excluded, each unordered pair counted once.
+
+    ``engine``: a ``repro.serving.QueryEngine`` — BC becomes a serving
+    client: each chunk is submitted as a query and the engine's batcher
+    reassembles the per-depth batch (same shapes, shared B), so BC traffic
+    coexists with — and batches against — other streams hitting the same
+    engine.  Results are equivalent to the direct driver up to float
+    summation order: the engine plans per chunk where the direct path
+    plans the whole batch once, and near-tied plans may elect different
+    (equally correct) kernels whose accumulation orders differ in the
+    last ulp.
     """
     if two_phase and source_chunks > 1:
         raise ValueError("two_phase is not supported by the batched "
                          "(source_chunks > 1) driver")
+    if engine is not None and two_phase:
+        raise ValueError("two_phase is not supported by the serving engine")
     n = adj.shape[0]
     At = adj.transpose()
     sources = np.arange(n) if sources is None else np.asarray(sources)
@@ -75,6 +87,26 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
     spgemm_time = 0.0
     calls = 0
 
+    def _serve_batch(As_, B_, Ms_, algo, complement):
+        """Run one per-depth chunk batch through the serving engine: one
+        ticket per chunk; the engine's batcher re-fuses the same-shape
+        tickets into one plan + one vmapped program."""
+        forced = None if algo == "auto" else algo
+        tickets = [engine.submit(a, B_, mm, complement=complement,
+                                 algorithm=forced)
+                   for a, mm in zip(As_, Ms_)]
+        engine.flush()
+        outs = [t.result() for t in tickets]
+        if complement:
+            return (np.stack([np.asarray(v) for v, _ in outs]),
+                    np.stack([np.asarray(p) for _, p in outs]))
+        return outs
+
+    def _serve_one(A_, B_, M_, algo, complement):
+        forced = None if algo == "auto" else algo
+        return engine.submit(A_, B_, M_, complement=complement,
+                             algorithm=forced).result()
+
     # ---- forward: BFS wave with #shortest-paths accumulation -------------
     num_sp = np.zeros((b, n), np.float32)
     num_sp[np.arange(b), sources] = 1.0
@@ -90,9 +122,13 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             f_chunks, _ = _chunk_rows(frontier, source_chunks)
             v_chunks, _ = _chunk_rows(visited, source_chunks)
             t0 = time.perf_counter()
-            vals, present = masked_spgemm_batched(
-                f_chunks, adj, v_chunks, algorithm=forward_algorithm,
-                semiring=PLUS_TIMES, complement=True)
+            if engine is not None:
+                vals, present = _serve_batch(f_chunks, adj, v_chunks,
+                                             forward_algorithm, True)
+            else:
+                vals, present = masked_spgemm_batched(
+                    f_chunks, adj, v_chunks, algorithm=forward_algorithm,
+                    semiring=PLUS_TIMES, complement=True)
             spgemm_time += time.perf_counter() - t0
             vals = np.asarray(vals).reshape(-1, n)[:b]
             present = np.asarray(present).reshape(-1, n)[:b]
@@ -100,11 +136,15 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             f_csr = csr_from_dense(frontier)
             visited_mask = csr_from_dense(visited)
             t0 = time.perf_counter()
-            vals, present = masked_spgemm(f_csr, adj, visited_mask,
-                                          algorithm=forward_algorithm,
-                                          semiring=PLUS_TIMES,
-                                          complement=True,
-                                          two_phase=two_phase)
+            if engine is not None:
+                vals, present = _serve_one(f_csr, adj, visited_mask,
+                                           forward_algorithm, True)
+            else:
+                vals, present = masked_spgemm(f_csr, adj, visited_mask,
+                                              algorithm=forward_algorithm,
+                                              semiring=PLUS_TIMES,
+                                              complement=True,
+                                              two_phase=two_phase)
             spgemm_time += time.perf_counter() - t0
             vals, present = np.asarray(vals), np.asarray(present)
         calls += 1
@@ -124,9 +164,13 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             w_chunks, _ = _chunk_rows(w, source_chunks)
             m_chunks, _ = _chunk_rows(mask_dense, source_chunks)
             t0 = time.perf_counter()
-            outs = masked_spgemm_batched(w_chunks, At, m_chunks,
-                                         algorithm=backward_algorithm,
-                                         semiring=PLUS_TIMES)
+            if engine is not None:
+                outs = _serve_batch(w_chunks, At, m_chunks,
+                                    backward_algorithm, False)
+            else:
+                outs = masked_spgemm_batched(w_chunks, At, m_chunks,
+                                             algorithm=backward_algorithm,
+                                             semiring=PLUS_TIMES)
             spgemm_time += time.perf_counter() - t0
             w_next = np.concatenate(
                 [np.asarray(o.to_dense()) for o in outs])[:b]
@@ -134,9 +178,13 @@ def betweenness_centrality(adj: CSR, sources: Optional[Sequence[int]] = None,
             w_csr = csr_from_dense(w)
             mask = csr_from_dense(mask_dense)
             t0 = time.perf_counter()
-            out = masked_spgemm(w_csr, At, mask,
-                                algorithm=backward_algorithm,
-                                semiring=PLUS_TIMES, two_phase=two_phase)
+            if engine is not None:
+                out = _serve_one(w_csr, At, mask, backward_algorithm, False)
+            else:
+                out = masked_spgemm(w_csr, At, mask,
+                                    algorithm=backward_algorithm,
+                                    semiring=PLUS_TIMES,
+                                    two_phase=two_phase)
             spgemm_time += time.perf_counter() - t0
             w_next = np.asarray(out.to_dense())
         calls += 1

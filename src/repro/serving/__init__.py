@@ -1,0 +1,22 @@
+"""Masked SpGEMM query-serving subsystem.
+
+``QueryEngine`` turns one-shot ``masked_spgemm`` calls into a served
+stream: structure-bucketed batching (one cached plan + one compiled
+program per bucket), sync and async-future submission with bounded-queue
+backpressure, a content-keyed bounded result cache, and per-bucket
+metrics.  See ``examples/quickstart.py`` §8 and
+``benchmarks/bench_serve.py`` for the measured batching regimes.
+"""
+from .batcher import Batcher, Request, bucket_key, merge_planned
+from .burst import BurstProgram, burst_eligible, get_program
+from .cache import (ResultCache, content_fingerprint, result_key,
+                    value_fingerprint)
+from .engine import QueryEngine, Ticket
+from .metrics import ServeMetrics
+
+__all__ = [
+    "Batcher", "BurstProgram", "QueryEngine", "Request", "ResultCache",
+    "ServeMetrics", "Ticket", "bucket_key", "burst_eligible",
+    "content_fingerprint", "get_program", "merge_planned", "result_key",
+    "value_fingerprint",
+]

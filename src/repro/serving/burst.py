@@ -1,0 +1,209 @@
+"""Structure-compiled burst programs: the serving layer's fast path.
+
+A same-structure bucket (shared B values, shared A/M sparsity, values of A
+varying per query — the burst case) re-derives NOTHING per query: the
+Gustavson product structure restricted to the mask is compiled ONCE into a
+flat gather program, and each query is then
+
+    prods = sr.mul(a_values[prod_a_idx], b_values_gathered)   # |F| muls
+    acc[slot] = sr.add(...)  in ascending-k order             # L adds
+
+executed vmapped over the whole bucket in one dispatch.  |F| is the
+mask-bounded flop count — the row kernels' padded state machines
+(O(width * n_state) work per row) collapse to exactly the arithmetic the
+paper's cost model counts.
+
+Bitwise contract: MSA, Hash and MCA all accumulate each output slot by the
+identical sequence — start from ``sr.zero``, then ``sr.add`` the products
+in ascending-k order (``accumulators.py``: every ``insert_row`` walks A's
+sorted row entries; a slot's state is only ever folded left-to-right).
+The replay performs that same sequence (products sorted by (slot, k),
+padded lanes add ``sr.zero``, which is the fold identity for every
+registered semiring on its value domain), so its results are bitwise the
+row kernels' — verified by ``tests/test_serving.py``.  Heap
+(associative-scan tree order) and Inner (``lax.reduce``) fold in different
+orders and stay on the batched row driver.
+
+``present`` is pure structure (a slot is present iff >= 1 structural
+product hits it) and is computed once per program, shared by every query.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import caches
+from repro.core.formats import CSR, _expand_rows, padded_from_csr
+from repro.core.masked_spgemm import MaskedSpGEMMResult
+from repro.core.planner import structure_signature
+from repro.core.semiring import Semiring
+
+#: plan algorithms whose accumulation order the replay reproduces exactly
+SEQ_SCATTER_ALGOS = ("msa", "hash", "mca")
+
+#: caps beyond which the replay falls back to the row kernels: L bounds the
+#: unrolled per-slot add chain (very dense product columns), F the gather
+#: footprint
+MAX_PRODUCTS_PER_SLOT = 128
+MAX_TOTAL_PRODUCTS = 1 << 22
+
+#: compiled burst programs, keyed by (A structure, B content, M structure,
+#: semiring, pad width); $REPRO_BURST_PROG_CAP overrides the capacity
+_programs = caches.LRUCache("serve-burst-programs", 64,
+                            env_var="REPRO_BURST_PROG_CAP")
+
+
+def _row_sort_perm(x: CSR) -> np.ndarray:
+    """Permutation mapping ``x.sorted_rows()`` entry order back to ``x.data``
+    (the kernels run on ``padded_from_csr``, which sorts rows first)."""
+    rows = _expand_rows(x.indptr)
+    return np.lexsort((x.indices, rows))
+
+
+class BurstProgram:
+    """One compiled structure: executes any batch of value-vectors for A."""
+
+    def __init__(self, A: CSR, B: CSR, M: CSR, semiring: Semiring,
+                 wm: int = None):
+        m, k = A.shape
+        _, n = B.shape
+        self.shape = (m, n)
+        self.nnz_a = A.nnz
+        self.semiring = semiring
+
+        a_perm = _row_sort_perm(A)          # kernels see sorted rows
+        a_rows = _expand_rows(A.indptr)[a_perm]
+        a_cols = A.indices[a_perm]
+
+        M_s = M.sorted_rows()
+        M_p = padded_from_csr(M, wm)
+        self.pm = pm = M_p.width
+        self.mask_cols = M_p.cols
+
+        # Gustavson expansion restricted to the mask: one product per
+        # (A entry e at (r, k)) x (B entry f at (k, c)) with (r, c) in M
+        B_s = B.sorted_rows()
+        b_cnt = np.diff(B_s.indptr)[a_cols]
+        ge_a = np.repeat(np.arange(len(a_cols)), b_cnt)   # index into perm'd A
+        ge_b = (np.repeat(B_s.indptr[a_cols], b_cnt)
+                + (np.arange(b_cnt.sum()) - np.repeat(
+                    np.cumsum(b_cnt) - b_cnt, b_cnt)))    # index into B_s
+        pr = a_rows[ge_a]                                 # product row
+        pk = a_cols[ge_a]                                 # contraction index
+        pc = B_s.indices[ge_b]                            # product col
+        # mask membership -> slot (position within the sorted mask row),
+        # via one searchsorted over the globally sorted (row, col) keys
+        mkey = (_expand_rows(M_s.indptr).astype(np.int64) * (n + 1)
+                + M_s.indices)
+        q = pr.astype(np.int64) * (n + 1) + pc
+        pos = np.searchsorted(mkey, q)
+        posc = np.minimum(pos, max(len(mkey) - 1, 0))
+        hit = (len(mkey) > 0) & (mkey[posc] == q)
+        keep = np.nonzero(hit)[0]
+        if len(keep) > MAX_TOTAL_PRODUCTS:
+            raise _TooLarge()
+        slot = (pr[keep] * pm
+                + (posc[keep] - M_s.indptr[pr[keep]])).astype(np.int64)
+        kk = pk[keep]
+        order = np.lexsort((kk, slot))                    # ascending k / slot
+        slot = slot[order]
+        self._a_gather = np.asarray(a_perm[ge_a[keep][order]], np.int32)
+        b_vals = B_s.data[ge_b[keep][order]].astype(np.float32)
+
+        # per-slot padded product lists: P[s, l] -> product lane (sentinel F
+        # selects the sr.zero pad, the fold identity)
+        F = len(slot)
+        counts = np.zeros(m * pm + 1, np.int64)
+        np.add.at(counts, slot + 1, 1)
+        starts = np.cumsum(counts)[:-1]
+        L = int(counts.max(initial=0))
+        if L > MAX_PRODUCTS_PER_SLOT:
+            raise _TooLarge()
+        self.max_chain = L
+        self.n_products = F
+        P = np.full((m * pm, max(L, 1)), F, np.int64)
+        lane = np.arange(F) - starts[slot]
+        P[slot, lane] = np.arange(F)
+        present = (counts[1:].reshape(m, pm) > 0)
+        present &= np.asarray(M_p.cols) < n               # pad slots absent
+        self.present = jnp.asarray(present)
+
+        zero = semiring.zero
+        # per-lane gathers, laid out (L, S): IA[l] indexes the query's value
+        # vector (sentinel -> the appended 0.0), BV[l] holds B's values (pad
+        # lanes carry sr.zero, the fold identity for every registered
+        # semiring on its value domain).  The fold MUST be a
+        # ``lax.fori_loop`` with the accumulator as loop carry: the
+        # loop-carried dependency pins the evaluation order (XLA reassocia-
+        # tes an unrolled chain), and each trip's ``add(acc, mul(a, b))``
+        # is the same expression the row kernels' insert_row folds, so XLA
+        # contracts both the same way (a sequential FMA chain on CPU) —
+        # that is what makes the replay bitwise-equal to msa/hash/mca, and
+        # the property tests pin it per backend.
+        IA = np.concatenate([self._a_gather,
+                             np.full((1,), A.nnz, np.int32)])[
+            np.minimum(P, F)].astype(np.int32).T.copy()
+        BV = np.concatenate([b_vals, np.full((1,), zero, np.float32)])[
+            np.minimum(P, F)].T.copy()
+        IAj = jnp.asarray(IA)
+        BVj = jnp.asarray(BV)
+        pres = self.present
+        mul, add = semiring.mul, semiring.add
+        n_lanes = IA.shape[0]
+
+        def one(av):                                      # av: (nnz_a,)
+            av = jnp.concatenate([av, jnp.zeros((1,), av.dtype)])
+
+            def lane(l, acc):
+                return add(acc, mul(av[IAj[l]], BVj[l]))
+
+            acc = jax.lax.fori_loop(
+                0, n_lanes, lane, jnp.full((m * pm,), zero, jnp.float32))
+            acc = acc.reshape(m, pm)
+            return jnp.where(pres, acc, jnp.asarray(zero, acc.dtype))
+
+        self._fn = jax.jit(jax.vmap(one))
+
+    def run(self, As) -> list:
+        """Serve a batch of same-structure A's: one device dispatch."""
+        stack = jnp.asarray(np.stack([a.data.astype(np.float32)
+                                      for a in As]))
+        vals = self._fn(stack)
+        vals.block_until_ready()
+        return [MaskedSpGEMMResult(vals[i], self.present, self.mask_cols,
+                                   self.shape)
+                for i in range(len(As))]
+
+
+class _TooLarge(Exception):
+    """Structure exceeds the replay caps; callers fall back silently."""
+
+
+def burst_eligible(plan_algorithm: str, complement: bool, A, B, M) -> bool:
+    return (plan_algorithm in SEQ_SCATTER_ALGOS and not complement
+            and isinstance(A, CSR) and isinstance(B, CSR)
+            and isinstance(M, CSR))
+
+
+def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
+                wm: int = None):
+    """Cached compile of the bucket's structure (None when over the caps)."""
+    from .cache import content_fingerprint
+    key = (structure_signature(A), content_fingerprint(B),
+           structure_signature(M), semiring.name, wm)
+    hit = _programs.get(key)
+    if hit is not None:
+        return hit if hit is not _OVER_CAP else None
+    try:
+        prog = BurstProgram(A, B, M, semiring, wm)
+    except _TooLarge:
+        _programs.put(key, _OVER_CAP)
+        return None
+    _programs.put(key, prog)
+    return prog
+
+
+#: cache sentinel: structure known to exceed the replay caps
+_OVER_CAP = object()

@@ -1,0 +1,473 @@
+"""Masked-SpGEMM query engine: submit/flush serving over the planner.
+
+The paper's lesson is that structure-dependent decisions (accumulator
+choice, mask layout) must be amortized; a serving layer amortizes them
+across *queries*.  ``QueryEngine`` accepts a stream of masked-SpGEMM
+requests, buckets them by structural signature (``batcher``), serves each
+bucket through ONE cached plan and — for row-kernel plans — one vmapped
+compiled program (``masked_spgemm_batched``), consults a bounded
+content-keyed result cache first (``cache``), and records per-bucket
+latency/throughput counters (``metrics``).
+
+Modes:
+
+* sync — ``submit()`` queues, ``flush()`` (or ``Ticket.result()``) drains.
+* async — a worker thread flushes full buckets immediately and partial
+  buckets after ``max_wait_ms``; ``submit()`` returns a future-like
+  ``Ticket`` at once.
+
+Backpressure: at most ``queue_cap`` requests may be pending.  The async
+engine blocks the submitter until the worker drains; the sync engine
+flushes inline — either way a producer can never grow the queue without
+bound.
+
+Tile- and distributed-elected plans are first-class: a bucket whose plan
+elects the BCSR tile route executes per element on the shared block
+executor, and requests carrying a ``mesh`` are served by
+``distributed_masked_spgemm`` (plan + ring host-prep both cached across
+the bucket by structural signature).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core.formats import CSR, tril
+from repro.core.masked_spgemm import masked_spgemm, masked_spgemm_batched
+from repro.core import planner
+from repro.core.semiring import Semiring, PLUS_TIMES
+
+from . import burst
+from .batcher import Batcher, Request, mesh_key, merge_planned
+from .cache import ResultCache, content_fingerprint, value_fingerprint
+from .metrics import ServeMetrics
+
+
+class Ticket:
+    """Future for one submitted request."""
+
+    __slots__ = ("_engine", "_event", "_value", "_error")
+
+    def __init__(self, engine: "QueryEngine"):
+        self._engine = engine
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """The served result; blocks until available.
+
+        In sync mode an unserved ticket triggers ``engine.flush()``; in
+        async mode the worker's max-wait policy bounds the wait.
+        """
+        if not self._event.is_set() and not self._engine.async_mode:
+            self._engine.flush()
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _complete(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+
+class QueryEngine:
+    """Serving front-end for ``masked_spgemm`` and its graph composites."""
+
+    # NOTE: engines register their result cache in ``repro.caches``; use
+    # the context manager (or call ``close()``) so a dropped engine does
+    # not leave the registry referencing its cached results.
+    def __init__(self, *, max_batch: int = 32, max_wait_ms: float = 2.0,
+                 queue_cap: int = 1024, async_mode: bool = False,
+                 merge_same_shape: bool = True, pad_factor: float = 4.0,
+                 result_cache: Optional[ResultCache] = None,
+                 cache_results: bool = True, use_burst: bool = True):
+        if queue_cap < max_batch:
+            raise ValueError(f"queue_cap ({queue_cap}) must be >= "
+                             f"max_batch ({max_batch})")
+        self.async_mode = async_mode
+        self.max_wait_s = max_wait_ms / 1e3
+        self.queue_cap = queue_cap
+        self.merge_same_shape = merge_same_shape
+        self.pad_factor = pad_factor
+        self.cache_results = cache_results
+        self.use_burst = use_burst
+        self.metrics = ServeMetrics()
+        self._owns_results = result_cache is None
+        self.results = (result_cache if result_cache is not None
+                        else ResultCache())
+        self._batcher = Batcher(max_batch=max_batch)
+        self._exec_lock = threading.Lock()
+        self._space = threading.Condition()
+        #: full buckets awaiting the worker (async mode only) — kept out of
+        #: the batcher so new same-key requests start a fresh bucket, but
+        #: still counted against queue_cap for backpressure
+        self._ready: List[List[Request]] = []
+        self._ready_count = 0
+        self._stop = False
+        self._worker: Optional[threading.Thread] = None
+        if async_mode:
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            name="repro-serve-worker",
+                                            daemon=True)
+            self._worker.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain outstanding work, stop the worker, and drop the engine's
+        own result cache from the process registry."""
+        self.flush()
+        if self._worker is not None:
+            with self._space:
+                self._stop = True
+                self._space.notify_all()
+            self._worker.join(timeout=5.0)
+            self._worker = None
+        if self._owns_results:
+            self.results.unregister()
+
+    def __enter__(self) -> "QueryEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, A, B, M, *, semiring: Semiring = PLUS_TIMES,
+               complement: bool = False, algorithm: Optional[str] = None,
+               mesh=None, axis: str = "data",
+               post: Optional[Callable] = None) -> Ticket:
+        """Queue C = M (.) (A B); returns a future-like ``Ticket``.
+
+        ``algorithm=None`` lets the planner decide (bucket-wide);
+        a string forces that algorithm (``"tile"``, a row kernel, or —
+        with ``mesh`` — ``"row"``/``"ring"``).  ``post`` transforms the raw
+        result before it reaches ``Ticket.result()`` (composites use it).
+        """
+        ticket = Ticket(self)
+        self.metrics.record_submit()
+        key = bkey = None
+        if (isinstance(A, CSR) and isinstance(B, CSR)
+                and isinstance(M, CSR)):
+            # one fingerprint pass feeds BOTH keys: the bucket key (A/M by
+            # structure, B by content) and the result key (all by content)
+            sa = planner.structure_signature(A)
+            sm = planner.structure_signature(M)
+            cb = content_fingerprint(B)
+            mk = mesh_key(mesh, axis)
+            bkey = (sa, cb, sm, semiring.name, complement, algorithm, mk)
+            if self.cache_results and not complement:
+                # only host-CSR, mask-bounded results are cached: device
+                # operands hash by id (GC could recycle it) and complement
+                # results are dense (m, n) pairs whose bytes would blow
+                # past the entry-count bound
+                key = ((sa,) + value_fingerprint(A), cb,
+                       (sm,) + value_fingerprint(M), semiring.name,
+                       complement, algorithm, mk,
+                       planner.cost_model_token())
+                hit = self.results.get(key)
+                if hit is not None:
+                    self.metrics.record_cache_hit()
+                    ticket._complete(post(hit) if post is not None else hit)
+                    return ticket
+        req = Request(A=A, B=B, M=M, semiring=semiring,
+                      complement=complement, algorithm=algorithm, mesh=mesh,
+                      axis=axis, ticket=ticket, post=post, cache_key=key,
+                      key=bkey)
+        self._admit(req)
+        return ticket
+
+    def submit_triangle(self, adj: CSR, *, relabel: bool = True,
+                        algorithm: Optional[str] = None) -> Ticket:
+        """Triangle count of an undirected graph as a served query
+        (paper §8.2: #tri = sum(L .* (L @ L))).  ``Ticket.result()`` is the
+        integer count; the underlying product batches/caches like any
+        other request with A = B = M = L."""
+        from repro.graphs.triangle_counting import degree_relabel
+        a = degree_relabel(adj) if relabel else adj
+        L = tril(a, strict=True)
+
+        def count(res) -> int:
+            return int(round(float(np.asarray(res.vals)[
+                np.asarray(res.present)].sum())))
+
+        return self.submit(L, L, L, algorithm=algorithm, post=count)
+
+    def serve(self, requests: Sequence[tuple]) -> List:
+        """Sync convenience: submit ``(A, B, M)`` (or ``(A, B, M, kwargs)``)
+        tuples, flush once, return results in order."""
+        tickets = []
+        for r in requests:
+            kwargs = r[3] if len(r) > 3 else {}
+            tickets.append(self.submit(r[0], r[1], r[2], **kwargs))
+        self.flush()
+        return [t.result() for t in tickets]
+
+    def _pending(self) -> int:
+        return self._batcher.pending + self._ready_count
+
+    def _admit(self, req: Request) -> None:
+        """Bounded-queue admission: block (async) or flush inline (sync)
+        while the queue is at capacity, then enqueue.  A bucket filled to
+        max_batch executes at once in sync mode; in async mode it is
+        handed to the worker so submit() stays non-blocking."""
+        while True:
+            if self._pending() < self.queue_cap:
+                break
+            if self.async_mode:
+                with self._space:
+                    if self._pending() >= self.queue_cap and not self._stop:
+                        self._space.wait(timeout=0.05)
+            else:
+                self.flush()
+        full = self._batcher.add(req)
+        if full is not None:
+            if self.async_mode:
+                with self._space:
+                    self._ready.append(full)
+                    self._ready_count += len(full)
+                    self._space.notify_all()
+            else:
+                self._execute_bucket(full)
+        elif self.async_mode:
+            with self._space:
+                self._space.notify_all()
+
+    def _take_ready(self) -> List[List[Request]]:
+        with self._space:
+            out, self._ready = self._ready, []
+            self._ready_count = 0
+        return out
+
+    # -- flushing -----------------------------------------------------------
+
+    def flush(self) -> None:
+        """Execute every queued bucket (one plan each; mergeable
+        same-shape row buckets fuse into wider batches first)."""
+        buckets = self._take_ready() + self._batcher.pop_all()
+        if not buckets:
+            return
+        self._execute_many(buckets)
+        with self._space:
+            self._space.notify_all()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._space:
+                if self._stop:
+                    return
+                deadline = self._batcher.next_deadline()
+                # full buckets are ready now; empty queue sleeps until a
+                # submit notifies; otherwise wake at the oldest bucket's
+                # max-wait deadline
+                wait = (None if deadline is None else
+                        max(0.0, deadline + self.max_wait_s
+                            - time.perf_counter()))
+                if not self._ready and (wait is None or wait > 0):
+                    self._space.wait(timeout=wait)
+                if self._stop:
+                    return
+            work = self._take_ready() + self._batcher.pop_aged(
+                self.max_wait_s)
+            if work:
+                self._execute_many(work)
+                with self._space:
+                    self._space.notify_all()
+
+    # -- execution ----------------------------------------------------------
+
+    def _execute_many(self, buckets: List[List[Request]]) -> None:
+        if not self.merge_same_shape:
+            for bucket in buckets:
+                self._execute_bucket(bucket)
+            return
+        planned, direct, forced_row = [], [], []
+        for bucket in buckets:
+            r = bucket[0]
+            if r.mesh is None and r.algorithm is None:
+                t0 = time.perf_counter()
+                try:
+                    plan = planner.plan(r.A, r.B, r.M,
+                                        complement=r.complement,
+                                        semiring=r.semiring)
+                except Exception as e:
+                    self._fail_bucket(bucket, e)
+                    continue
+                planned.append(((bucket, plan), time.perf_counter() - t0))
+            elif r.mesh is None and r.algorithm != "tile":
+                forced_row.append(bucket)
+            else:
+                direct.append(bucket)
+        for bucket in direct:
+            self._execute_bucket(bucket)
+        # forced row-kernel buckets sharing B/shape/options fuse without a
+        # plan: the batched driver widens pad widths to the batch maxima
+        # itself (the BC client forcing msa stays one program per depth)
+        groups: dict = {}
+        for bucket in forced_row:
+            r = bucket[0]
+            b_fp = (r.key[1] if r.key is not None
+                    else content_fingerprint(r.B))
+            sig = (b_fp, r.A.shape, r.M.shape, r.semiring.name,
+                   r.complement, r.algorithm)
+            groups.setdefault(sig, []).append(bucket)
+        for members in groups.values():
+            self._execute_bucket([q for b in members for q in b],
+                                 merged_from=len(members))
+        merged = merge_planned([g for g, _ in planned],
+                               pad_factor=self.pad_factor)
+        plan_s = sum(dt for _, dt in planned) / max(1, len(merged))
+        for reqs, plan, merged_from in merged:
+            self._execute_bucket(reqs, plan=plan, plan_s=plan_s,
+                                 merged_from=merged_from)
+
+    def _fail_bucket(self, reqs: List[Request], err: BaseException) -> None:
+        self.metrics.record_failure(len(reqs))
+        for r in reqs:
+            r.ticket._fail(err)
+
+    def _execute_bucket(self, reqs: List[Request],
+                        plan: Optional[planner.Plan] = None,
+                        plan_s: float = 0.0, merged_from: int = 1) -> None:
+        """Serve one bucket: every request shares structure (or, merged,
+        shape + algorithm), so one plan covers all of them."""
+        rep = reqs[0]
+        t_in = time.perf_counter()
+        queue_wait = t_in - min(r.submitted_at for r in reqs)
+        with self._exec_lock:
+            try:
+                if rep.mesh is not None:
+                    results, route, algo = self._run_distributed(reqs)
+                else:
+                    results, route, algo, plan = self._run_local(
+                        reqs, plan, uniform=(merged_from == 1))
+            except Exception as e:
+                self._fail_bucket(reqs, e)
+                return
+            exec_s = time.perf_counter() - t_in
+        self.metrics.record_bucket(
+            size=len(reqs), algorithm=algo, route=route,
+            queue_wait_s=queue_wait, plan_s=plan_s, exec_s=exec_s,
+            merged_from=merged_from)
+        # Only uniform buckets' results are cached: width-merged buckets
+        # return results padded to the MERGED width, not the shape a fresh
+        # one-shot computation produces, and a hit must be byte-exact.
+        # The token re-check guards the submit->execute window: if a
+        # calibration profile activated while the request was queued, this
+        # result was planned under a different token than its key records.
+        cacheable = self.cache_results and merged_from == 1
+        token = planner.cost_model_token() if cacheable else None
+        for r, res in zip(reqs, results):
+            if (cacheable and r.cache_key is not None
+                    and r.cache_key[-1] == token):
+                self.results.put(r.cache_key, res)
+            # a raising post callback must fail ONLY its own ticket — an
+            # escaped exception here would strand the bucket's remaining
+            # tickets and kill the async worker thread
+            try:
+                value = res if r.post is None else r.post(res)
+            except Exception as e:
+                self.metrics.record_failure(1)
+                r.ticket._fail(e)
+                continue
+            r.ticket._complete(value)
+
+    def _run_distributed(self, reqs: List[Request]):
+        """Mesh-carrying bucket: the distributed plan and the ring's host
+        prep are signature-cached, so the bucket pays them once."""
+        from repro.core.distributed import distributed_masked_spgemm
+        rep = reqs[0]
+        algo = rep.algorithm or "auto"
+        out = []
+        for r in reqs:
+            res = distributed_masked_spgemm(
+                r.A, r.B, r.M, r.mesh, algorithm=algo, axis=r.axis,
+                semiring=r.semiring, complement=r.complement)
+            out.append(res)
+        jax.block_until_ready([r.vals for r in out])
+        if algo == "auto":
+            algo = planner.plan_distributed(
+                rep.A, rep.B, rep.M, int(rep.mesh.shape[rep.axis]),
+                complement=rep.complement, semiring=rep.semiring).route
+        return out, "distributed", algo
+
+    def _run_local(self, reqs: List[Request],
+                   plan: Optional[planner.Plan], uniform: bool = True):
+        rep = reqs[0]
+        forced = rep.algorithm
+        if plan is None and forced is None:
+            plan = planner.plan(rep.A, rep.B, rep.M,
+                                complement=rep.complement,
+                                semiring=rep.semiring)
+        algo = forced if forced is not None else plan.algorithm
+
+        if (uniform and forced is None and self.use_burst
+                and burst.burst_eligible(algo, rep.complement, rep.A,
+                                         rep.B, rep.M)):
+            # same-structure bucket on a sequential-scatter plan: the
+            # structure-compiled replay serves the whole bucket in one
+            # dispatch, bitwise the plan's row kernel
+            prog = burst.get_program(rep.A, rep.B, rep.M, rep.semiring,
+                                     wm=plan.widths[2])
+            if prog is not None:
+                out = prog.run([r.A for r in reqs])
+                return out, "burst", algo, plan
+
+        if algo == "tile":
+            # tile-elected: the batched driver serves the plan per element
+            # on the shared block executor (one plan, one compiled
+            # executor).  Forced tile (plan None) goes through the one-shot
+            # driver, complement passing through so it raises exactly like
+            # a direct call (the planner never elects tile under
+            # complement).
+            if plan is not None and not rep.complement:
+                out = masked_spgemm_batched(
+                    [r.A for r in reqs], rep.B, [r.M for r in reqs],
+                    semiring=rep.semiring, plan=plan)
+            else:
+                out = [masked_spgemm(r.A, r.B, r.M, algorithm="tile",
+                                     semiring=r.semiring,
+                                     complement=r.complement, plan=plan)
+                       for r in reqs]
+            jax.block_until_ready([r.vals for r in out])
+            return out, "tile", "tile", plan
+
+        if len(reqs) == 1:
+            res = masked_spgemm(rep.A, rep.B, rep.M,
+                                algorithm=forced or "auto",
+                                semiring=rep.semiring,
+                                complement=rep.complement, plan=plan)
+            out = [res]
+            route = "single"
+        else:
+            raw = masked_spgemm_batched(
+                [r.A for r in reqs], rep.B, [r.M for r in reqs],
+                algorithm=forced or "auto", semiring=rep.semiring,
+                complement=rep.complement, plan=plan)
+            if rep.complement:
+                vals, present = raw
+                out = [(vals[i], present[i]) for i in range(len(reqs))]
+            else:
+                out = raw
+            route = "batched"
+        if rep.complement:
+            jax.block_until_ready([v for v, _ in out])
+        else:
+            jax.block_until_ready([r.vals for r in out])
+        return out, route, algo, plan

@@ -1,0 +1,105 @@
+"""Serving metrics: per-bucket latency/throughput counters.
+
+The engine records one event per submitted request and one per executed
+bucket; ``snapshot()`` renders the counters the benchmark consumes
+(``benchmarks/bench_serve.py`` writes them into ``serve_grid.json``).
+Everything is wall-clock host time — the quantity a serving SLO sees,
+planner + host prep + device execution included.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, Optional
+
+#: per-bucket records kept for inspection (ring buffer, oldest dropped)
+BUCKET_LOG_CAPACITY = 256
+
+
+class ServeMetrics:
+    """Thread-safe counters for one ``QueryEngine``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self.submitted = 0
+            self.completed = 0
+            self.failed = 0
+            self.result_cache_hits = 0
+            self.buckets_executed = 0
+            self.batched_requests = 0
+            self.max_batch_seen = 0
+            self.queue_wait_s = 0.0
+            self.plan_s = 0.0
+            self.exec_s = 0.0
+            self.merged_groups = 0
+            self._bucket_log: deque = deque(maxlen=BUCKET_LOG_CAPACITY)
+
+    # -- recording ----------------------------------------------------------
+
+    def record_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+
+    def record_cache_hit(self) -> None:
+        with self._lock:
+            self.result_cache_hits += 1
+            self.completed += 1
+
+    def record_failure(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def record_bucket(self, *, size: int, algorithm: str, route: str,
+                      queue_wait_s: float, plan_s: float, exec_s: float,
+                      merged_from: int = 1,
+                      label: Optional[str] = None) -> None:
+        """One executed bucket: ``size`` requests served by one plan.
+
+        ``queue_wait_s`` is the oldest member's submit-to-execute wait;
+        ``plan_s`` covers planning + bucket bookkeeping, ``exec_s`` the
+        product itself (host prep + device, blocked until ready).
+        """
+        with self._lock:
+            self.buckets_executed += 1
+            self.batched_requests += size
+            self.completed += size
+            self.max_batch_seen = max(self.max_batch_seen, size)
+            self.queue_wait_s += queue_wait_s
+            self.plan_s += plan_s
+            self.exec_s += exec_s
+            if merged_from > 1:
+                self.merged_groups += merged_from - 1
+            self._bucket_log.append({
+                "size": size, "algorithm": algorithm, "route": route,
+                "queue_wait_s": queue_wait_s, "plan_s": plan_s,
+                "exec_s": exec_s, "merged_from": merged_from,
+                "label": label})
+
+    # -- reading ------------------------------------------------------------
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            done = self.buckets_executed
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "result_cache_hits": self.result_cache_hits,
+                "buckets_executed": done,
+                "batched_requests": self.batched_requests,
+                "mean_batch": (self.batched_requests / done) if done else 0.0,
+                "max_batch": self.max_batch_seen,
+                "merged_groups": self.merged_groups,
+                "queue_wait_s": self.queue_wait_s,
+                "plan_s": self.plan_s,
+                "exec_s": self.exec_s,
+                "mean_bucket_exec_s": (self.exec_s / done) if done else 0.0,
+            }
+
+    def bucket_log(self):
+        with self._lock:
+            return list(self._bucket_log)

@@ -1,0 +1,516 @@
+"""Serving subsystem: bitwise equivalence to one-shot calls, batching
+policies, result cache, bounded caches, async mode, backpressure.
+
+The core contract (ISSUE 5): ANY interleaving/batching of a request stream
+returns results bitwise-equal to sequential one-shot ``masked_spgemm`` on
+the same operands — including tile-elected plans, complemented masks, and
+result-cache replays.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro import caches
+from repro.core.formats import (CSR, block_sparse, csr_from_dense,
+                                erdos_renyi, er_mask)
+from repro.core.masked_spgemm import masked_spgemm
+from repro.core.planner import clear_plan_cache, plan
+from repro.core.semiring import MIN_PLUS, PLUS_TIMES
+from repro.serving import (Batcher, QueryEngine, ResultCache,
+                           content_fingerprint)
+from repro.serving.batcher import Request
+
+
+def revalue(x: CSR, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    return CSR(x.indptr, x.indices,
+               rng.uniform(0.5, 1.5, x.nnz).astype(np.float32), x.shape)
+
+
+def structure_pool():
+    """Small operand pool: ER row-kernel regimes + a block-dense triple the
+    tile route wins (forced or auto-elected)."""
+    pool = []
+    for s in range(3):
+        pool.append((erdos_renyi(48, 3 + s, seed=40 + s),
+                     erdos_renyi(48, 3, seed=50 + s),
+                     er_mask(48, 5, seed=60 + s)))
+    blocky = (csr_from_dense(block_sparse(48, 8, 0.5, 0.6, seed=70)),
+              csr_from_dense(block_sparse(48, 8, 0.5, 0.6, seed=71)),
+              csr_from_dense(block_sparse(48, 8, 0.6, 0.5, seed=72,
+                                          mask=True)))
+    pool.append(blocky)
+    return pool
+
+
+POOL = structure_pool()
+
+
+def assert_same_result(got, want, complement=False):
+    if complement:
+        gv, gp = got
+        wv, wp = want
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+        return
+    np.testing.assert_array_equal(np.asarray(got.vals),
+                                  np.asarray(want.vals))
+    np.testing.assert_array_equal(np.asarray(got.present),
+                                  np.asarray(want.present))
+    np.testing.assert_array_equal(np.asarray(got.mask_cols),
+                                  np.asarray(want.mask_cols))
+
+
+# ---------------------------------------------------------------------------
+# property: any interleaving/batching == sequential one-shot, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(stream_seed=st.integers(0, 10 ** 6),
+       max_batch=st.integers(1, 9),
+       n_queries=st.integers(3, 14),
+       merge=st.sampled_from([True, False]))
+def test_any_batching_bitwise_equals_one_shot(stream_seed, max_batch,
+                                              n_queries, merge):
+    rng = np.random.default_rng(stream_seed)
+    queries = []
+    for q in range(n_queries):
+        A, B, M = POOL[int(rng.integers(len(POOL)))]
+        kind = int(rng.integers(4))
+        complement = kind == 1
+        algorithm = "tile" if kind == 2 else None
+        if algorithm == "tile" or kind == 3:
+            A, B, M = POOL[3]           # block triple: tile-expressible
+            complement = False
+        queries.append((revalue(A, 1000 + q), B, M, complement, algorithm))
+
+    with QueryEngine(max_batch=max_batch, merge_same_shape=merge,
+                     cache_results=False) as eng:
+        tickets = [eng.submit(A, B, M, complement=c, algorithm=alg)
+                   for A, B, M, c, alg in queries]
+        eng.flush()
+        for (A, B, M, c, alg), t in zip(queries, tickets):
+            want = masked_spgemm(A, B, M, complement=c,
+                                 algorithm=alg or "auto")
+            assert_same_result(t.result(), want, complement=c)
+
+
+def test_tile_elected_plan_served_bitwise():
+    A, B, M = POOL[3]
+    p = plan(A, B, M)
+    with QueryEngine(cache_results=False) as eng:
+        tickets = [eng.submit(revalue(A, s), B, M) for s in range(3)]
+        eng.flush()
+        for s, t in zip(range(3), tickets):
+            want = masked_spgemm(revalue(A, s), B, M)
+            assert_same_result(t.result(), want)
+    # the property is interesting iff the pool really exercises the tile
+    # route when it is eligible; forcing it must agree too
+    forced = masked_spgemm(A, B, M, algorithm="tile")
+    auto = masked_spgemm(A, B, M)
+    assert_same_result(auto, forced)
+
+
+def test_cache_hit_replay_is_bitwise_identical():
+    A, B, M = POOL[0]
+    stream = [(revalue(A, s % 3), B, M) for s in range(9)]
+    with QueryEngine(max_batch=4) as eng:
+        first = [eng.submit(*q) for q in stream]
+        eng.flush()
+        first = [t.result() for t in first]
+        hits0 = eng.metrics.snapshot()["result_cache_hits"]
+        second = [eng.submit(*q) for q in stream]
+        assert all(t.done() for t in second)   # served from cache, no flush
+        second = [t.result() for t in second]
+        hits1 = eng.metrics.snapshot()["result_cache_hits"]
+    assert hits1 - hits0 == len(stream)
+    for f, s in zip(first, second):
+        assert_same_result(s, f)
+    for q, s in zip(stream, second):
+        assert_same_result(s, masked_spgemm(*q))
+
+
+def test_semiring_and_forced_algorithm_streams():
+    A, B, M = POOL[1]
+    with QueryEngine(cache_results=False) as eng:
+        t1 = eng.submit(A, B, M, semiring=MIN_PLUS, algorithm="msa")
+        t2 = eng.submit(A, B, M, semiring=PLUS_TIMES, algorithm="heap")
+        eng.flush()
+        assert_same_result(t1.result(), masked_spgemm(
+            A, B, M, semiring=MIN_PLUS, algorithm="msa"))
+        assert_same_result(t2.result(), masked_spgemm(
+            A, B, M, semiring=PLUS_TIMES, algorithm="heap"))
+
+
+def test_distributed_request_served():
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.distributed import distributed_masked_spgemm
+    A, B, M = POOL[0]
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with QueryEngine(cache_results=False) as eng:
+        t = eng.submit(A, B, M, mesh=mesh)
+        eng.flush()
+        want = distributed_masked_spgemm(A, B, M, mesh)
+        assert_same_result(t.result(), want)
+        log = eng.metrics.bucket_log()
+        assert log and log[-1]["route"] == "distributed"
+
+
+def test_triangle_composite_matches_direct():
+    from repro.graphs import triangle_count
+    g = erdos_renyi(128, 8, seed=9)
+    want, _ = triangle_count(g)
+    with QueryEngine() as eng:
+        t = eng.submit_triangle(g)
+        eng.flush()
+        assert t.result() == want
+
+
+def test_bc_serving_client_matches_direct():
+    from repro.graphs.betweenness import betweenness_centrality
+    g = erdos_renyi(72, 4, seed=11)
+    want, _, calls_direct = betweenness_centrality(
+        g, sources=range(12), source_chunks=3)
+    with QueryEngine(max_batch=16) as eng:
+        got, _, calls_served = betweenness_centrality(
+            g, sources=range(12), source_chunks=3, engine=eng)
+        snap = eng.metrics.snapshot()
+    # per-chunk plans may legally elect different (equally correct) kernels
+    # than the direct driver's single batch plan -> allclose, not bitwise
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert calls_served == calls_direct
+    assert snap["batched_requests"] > 0
+
+
+# ---------------------------------------------------------------------------
+# batching/flush policies, async mode, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_forced_algorithm_chunks_fuse_into_one_program():
+    """Forced-kernel buckets sharing B/shape/options merge without a plan
+    (the batched driver widens widths itself), so a BC client forcing msa
+    still gets one program per depth, matching the direct driver bitwise
+    (same chunk set, same batched program)."""
+    from repro.graphs.betweenness import betweenness_centrality
+    g = erdos_renyi(64, 4, seed=13)
+    want, _, calls = betweenness_centrality(g, sources=range(9),
+                                            algorithm="msa",
+                                            source_chunks=3)
+    with QueryEngine(max_batch=16) as eng:
+        got, _, calls2 = betweenness_centrality(g, sources=range(9),
+                                                algorithm="msa",
+                                                source_chunks=3,
+                                                engine=eng)
+        snap = eng.metrics.snapshot()
+    np.testing.assert_array_equal(got, want)
+    assert calls2 == calls
+    assert snap["mean_batch"] > 1        # chunks fused, not one-by-one
+
+
+def test_full_bucket_flushes_immediately():
+    A, B, M = POOL[0]
+    with QueryEngine(max_batch=3, cache_results=False) as eng:
+        ts = [eng.submit(revalue(A, s), B, M) for s in range(3)]
+        assert all(t.done() for t in ts)   # hit max_batch -> executed
+        assert eng.metrics.snapshot()["buckets_executed"] == 1
+
+
+def test_sync_result_triggers_flush():
+    A, B, M = POOL[0]
+    with QueryEngine(cache_results=False) as eng:
+        t = eng.submit(A, B, M)
+        assert not t.done()
+        assert_same_result(t.result(), masked_spgemm(A, B, M))
+
+
+def test_async_max_wait_flushes_partial_bucket():
+    A, B, M = POOL[0]
+    with QueryEngine(async_mode=True, max_wait_ms=10.0,
+                     cache_results=False) as eng:
+        t = eng.submit(A, B, M)
+        assert_same_result(t.result(timeout=30.0), masked_spgemm(A, B, M))
+
+
+def test_backpressure_bounded_queue():
+    A, B, M = POOL[0]
+    with QueryEngine(max_batch=2, queue_cap=2, cache_results=False) as eng:
+        # sync: admission flushes inline instead of growing the queue
+        ts = [eng.submit(revalue(A, s), B, M) for s in range(7)]
+        eng.flush()
+        for s, t in zip(range(7), ts):
+            assert_same_result(t.result(),
+                               masked_spgemm(revalue(A, s), B, M))
+    with QueryEngine(async_mode=True, max_batch=2, queue_cap=2,
+                     max_wait_ms=1.0, cache_results=False) as eng:
+        ts = [eng.submit(revalue(A, s), B, M) for s in range(7)]
+        for s, t in zip(range(7), ts):
+            assert_same_result(t.result(timeout=30.0),
+                               masked_spgemm(revalue(A, s), B, M))
+
+
+def test_error_propagates_to_ticket():
+    A, B, M = POOL[0]
+    with QueryEngine(cache_results=False) as eng:
+        t = eng.submit(A, B, M, complement=True, algorithm="mca")
+        eng.flush()
+        with pytest.raises(NotImplementedError):
+            t.result()
+        assert eng.metrics.snapshot()["failed"] == 1
+
+
+def test_raising_post_fails_only_its_ticket():
+    A, B, M = POOL[0]
+    with QueryEngine(cache_results=False) as eng:
+        boom = eng.submit(A, B, M, post=lambda res: 1 / 0)
+        ok = eng.submit(revalue(A, 5), B, M)
+        eng.flush()
+        with pytest.raises(ZeroDivisionError):
+            boom.result()
+        assert_same_result(ok.result(), masked_spgemm(revalue(A, 5), B, M))
+    # async: the worker must survive a raising post callback
+    with QueryEngine(async_mode=True, max_batch=8, max_wait_ms=1.0,
+                     cache_results=False) as eng:
+        boom = eng.submit(A, B, M, post=lambda res: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            boom.result(timeout=30.0)
+        ok = eng.submit(revalue(A, 6), B, M)
+        assert_same_result(ok.result(timeout=30.0),
+                           masked_spgemm(revalue(A, 6), B, M))
+
+
+def test_batched_tile_plan_rejects_unsupported_semiring():
+    import dataclasses
+    from repro.core.masked_spgemm import masked_spgemm_batched
+    from repro.core.planner import plan as _plan
+    A, B, M = POOL[3]
+    p = _plan(A, B, M)
+    if p.algorithm != "tile":
+        p = dataclasses.replace(p, algorithm="tile",
+                                tile_block=p.tile_block or 8)
+    with pytest.raises(NotImplementedError):
+        masked_spgemm_batched([A], B, [M], semiring=MIN_PLUS, plan=p)
+
+
+def test_forced_tile_complement_raises_like_one_shot():
+    A, B, M = POOL[3]
+    with pytest.raises(NotImplementedError):
+        masked_spgemm(A, B, M, algorithm="tile", complement=True)
+    with QueryEngine(cache_results=False) as eng:
+        t = eng.submit(A, B, M, complement=True, algorithm="tile")
+        eng.flush()
+        with pytest.raises(NotImplementedError):
+            t.result()
+
+
+def test_engine_close_unregisters_owned_result_cache():
+    import repro.caches as caches_mod
+    eng1 = QueryEngine()
+    eng2 = QueryEngine()
+    names = set(caches_mod.cache_info())
+    assert eng1.results.name != eng2.results.name   # both visible
+    assert {eng1.results.name, eng2.results.name} <= names
+    eng1.close()
+    eng2.close()
+    left = set(caches_mod.cache_info())
+    assert eng1.results.name not in left
+    assert eng2.results.name not in left
+
+
+def test_merged_same_shape_buckets_match_one_shot_dense():
+    """Padding-aware merging: two same-shape structures sharing B fuse into
+    one batch with widened widths; results are the one-shot results padded
+    to the group width — identical after densifying."""
+    _, B, _ = POOL[0]
+    A1, _, M1 = POOL[0]
+    A2 = erdos_renyi(48, 5, seed=81)
+    M2 = er_mask(48, 9, seed=82)
+    with QueryEngine(max_batch=16, merge_same_shape=True,
+                     use_burst=False, cache_results=False) as eng:
+        t1 = eng.submit(A1, B, M1)
+        t2 = eng.submit(A2, B, M2)
+        eng.flush()
+        merged = eng.metrics.snapshot()["merged_groups"]
+        for t, (A, M) in zip((t1, t2), ((A1, M1), (A2, M2))):
+            got = t.result()
+            want = masked_spgemm(A, B, M)
+            if merged and got.vals.shape != want.vals.shape:
+                np.testing.assert_array_equal(np.asarray(got.to_dense()),
+                                              np.asarray(want.to_dense()))
+            else:
+                assert_same_result(got, want)
+
+
+def test_burst_program_bitwise_vs_scatter_kernels():
+    from repro.core.planner import plan as _plan
+    from repro.serving.burst import get_program
+    A, B, M = POOL[1]
+    p = _plan(A, B, M)
+    prog = get_program(A, B, M, PLUS_TIMES, wm=p.widths[2])
+    assert prog is not None
+    As = [revalue(A, s) for s in range(4)]
+    got = prog.run(As)
+    for a, g in zip(As, got):
+        for alg in ("msa", "hash", "mca"):
+            w = masked_spgemm(a, B, M, algorithm=alg)
+            assert_same_result(g, w)
+
+
+def test_batched_driver_serves_tile_plan():
+    """masked_spgemm_batched with a tile-elected plan executes every
+    element on the block executors, bitwise the one-shot tile route."""
+    import dataclasses
+    from repro.core.masked_spgemm import masked_spgemm_batched
+    from repro.core.planner import plan_batch
+    A, B, M = POOL[3]
+    As = [A, revalue(A, 1)]
+    p = plan_batch(As, B, [M, M], allow_tile=True)
+    if p.algorithm != "tile":       # force the route; widths/stats real
+        p = dataclasses.replace(p, algorithm="tile",
+                                tile_block=p.tile_block or 8)
+    outs = masked_spgemm_batched(As, B, [M, M], plan=p)
+    for a, o in zip(As, outs):
+        assert_same_result(o, masked_spgemm(a, B, M, plan=p))
+
+
+def test_batcher_buckets_by_structure_and_b_content():
+    A, B, M = POOL[0]
+    b = Batcher(max_batch=8)
+
+    def req(a, bb, mm):
+        return Request(A=a, B=bb, M=mm, semiring=PLUS_TIMES,
+                       complement=False, algorithm=None, mesh=None,
+                       axis="data", ticket=None, post=None, cache_key=None)
+
+    assert b.add(req(revalue(A, 1), B, M)) is None
+    assert b.add(req(revalue(A, 2), B, M)) is None       # same bucket
+    assert b.add(req(revalue(A, 3), revalue(B, 9), M)) is None  # new B
+    buckets = b.pop_all()
+    assert sorted(len(x) for x in buckets) == [1, 2]
+    assert b.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded caches: a long mixed-structure stream cannot grow without bound
+# ---------------------------------------------------------------------------
+
+
+def test_long_mixed_stream_keeps_every_cache_bounded():
+    clear_plan_cache()
+    caches.set_capacity("planner-plans", 16)
+    try:
+        with QueryEngine(result_cache=ResultCache(capacity=8,
+                                                  name="serve-test"),
+                         max_batch=4) as eng:
+            for q in range(60):     # 60 distinct structures > any capacity
+                A = erdos_renyi(32, 3, seed=5000 + q)
+                B = erdos_renyi(32, 3, seed=6000 + q)
+                M = er_mask(32, 4, seed=7000 + q)
+                eng.submit(A, B, M)
+                if q % 7 == 0:
+                    eng.flush()
+            eng.flush()
+            info = caches.cache_info()
+            assert len(eng.results) <= 8
+        assert info["planner-plans"]["size"] <= 16
+        for name, row in info.items():
+            if "capacity" in row and row["capacity"] >= 0:
+                assert row["size"] <= row["capacity"], (name, row)
+    finally:
+        caches.set_capacity("planner-plans", 128)
+        caches.unregister("serve-test")
+        clear_plan_cache()
+
+
+def test_caches_registry_clear_all_and_introspection():
+    A, B, M = POOL[0]
+    plan(A, B, M)
+    info = caches.cache_info()
+    assert info["planner-plans"]["size"] >= 1
+    for expected in ("planner-plans", "ring-prep", "dist-row-program",
+                     "dist-sparse-ring-program"):
+        assert expected in info
+    caches.clear_all()
+    info = caches.cache_info()
+    assert all(row["size"] == 0 for row in info.values())
+
+
+def test_lru_capacity_and_stats():
+    lru = caches.LRUCache("lru-under-test", 2)
+    try:
+        lru.put("a", 1), lru.put("b", 2)
+        assert lru.get("a") == 1          # refreshes a
+        lru.put("c", 3)                   # evicts b (LRU)
+        assert lru.peek("b") is None and lru.get("a") == 1
+        assert len(lru) == 2
+        lru.set_capacity(1)               # shrink evicts immediately
+        assert len(lru) == 1
+        assert lru.info()["hits"] == 2
+        with pytest.raises(ValueError):
+            lru.set_capacity(0)
+    finally:
+        caches.unregister("lru-under-test")
+
+
+def test_result_cache_distinguishes_values_not_just_structure():
+    A, B, M = POOL[0]
+    A2 = revalue(A, 99)
+    assert content_fingerprint(A) != content_fingerprint(A2)
+    assert content_fingerprint(A) == content_fingerprint(
+        CSR(A.indptr, A.indices, A.data.copy(), A.shape))
+
+
+def test_concurrent_submitters_async():
+    A, B, M = POOL[0]
+    results = {}
+
+    def client(cid):
+        t = eng.submit(revalue(A, cid), B, M)
+        results[cid] = t.result(timeout=60.0)
+
+    with QueryEngine(async_mode=True, max_batch=4, max_wait_ms=2.0,
+                     cache_results=False) as eng:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=60.0)
+    assert sorted(results) == list(range(8))
+    for cid, got in results.items():
+        assert_same_result(got, masked_spgemm(revalue(A, cid), B, M))
+
+
+def test_trial_sized_async_stream_matches_one_shot():
+    """Regression: concurrent plan() misses on one structure (async
+    submitters racing the worker) must resolve to ONE plan — the measured
+    trial at m >= TRIAL_MIN_ROWS is load-dependent, and racing trials used
+    to elect different near-tied kernels, mixing plans within a stream."""
+    clear_plan_cache()
+    A = erdos_renyi(256, 2, seed=21)
+    B = erdos_renyi(256, 2, seed=22)
+    M = er_mask(256, 32, seed=23)
+    with QueryEngine(async_mode=True, max_batch=8, max_wait_ms=1.0,
+                     cache_results=False) as eng:
+        ts = [eng.submit(revalue(A, s), B, M) for s in range(16)]
+        got = [t.result(timeout=60.0) for t in ts]
+    for s, g in zip(range(16), got):
+        assert_same_result(g, masked_spgemm(revalue(A, s), B, M))
+
+
+# ---------------------------------------------------------------------------
+# registration plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_serve_registered_in_benchmark_order():
+    from benchmarks.run import ORDER
+    assert "serve" in ORDER

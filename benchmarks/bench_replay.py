@@ -1,0 +1,151 @@
+"""Replay-based perf-regression gate over the committed golden trace.
+
+Replays ``results/traces/golden_v1.jsonl`` (a recorded mixed-structure
+query stream with repeats) through ``repro.serving.replay_trace`` and
+writes ``results/bench/replay_grid.json``:
+
+* ``_replay_deterministic``    — two default-knob replays (plus an async
+  replay) produce bit-identical digests: same bucket schedule, same
+  deterministic counters, byte-exact results.
+* ``_replay_matches_oneshot``  — every replayed result is byte-equal to a
+  sequential one-shot ``masked_spgemm`` oracle over the same trace.
+* ``_autotuned_beats_default`` — one autotuner pass (the default config is
+  in its grid) yields knobs whose replayed throughput is at least the
+  default knobs' throughput, within noise tolerance.
+* ``_replay_throughput_ok``    — the machine-relative floor: engine replay
+  throughput >= ``REPLAY_FLOOR`` x the warm sequential one-shot loop on
+  the SAME host.  Absolute q/s is machine-dependent; this ratio is the
+  quantity a batching regression actually moves, so CI gates on it.
+
+``--strict`` in ``benchmarks.run`` fails the job when any flag is False.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.masked_spgemm import masked_spgemm
+from repro.serving.trace import (Trace, _result_crc, golden_trace_path,
+                                 replay_trace, synthesize_trace)
+from repro.tuning.autotune import DEFAULT_KNOBS, autotune
+
+from .common import save
+
+#: engine replay must reach this fraction of the warm sequential loop's
+#: throughput on the same host (batching + caching should beat 1.0x; the
+#: floor only trips on a real serving-path regression, not host noise)
+REPLAY_FLOOR = 0.8
+
+#: autotuned knobs must reach this fraction of the default knobs'
+#: throughput (the default config is in the search grid, so the winner is
+#: >= default up to re-measurement noise)
+AUTOTUNE_TOLERANCE = 0.95
+
+
+def _best_of(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sequential_oracle(events) -> List[int]:
+    """One-shot results for every trace event, in arrival order."""
+    crcs = []
+    for (_t, A, B, M, kw) in events:
+        res = masked_spgemm(A, B, M, semiring=kw["semiring"],
+                            complement=kw["complement"],
+                            algorithm=kw.get("algorithm") or "auto")
+        crcs.append(_result_crc(res))
+    return crcs
+
+
+def run(*, iters: int = 3, smoke: bool = False,
+        trace_path: str = None, autotune_rounds: int = 1) -> Dict:
+    path = trace_path or golden_trace_path()
+    trace = Trace.load(path)
+    print(f"[replay] trace {trace.name}: {trace.n_requests} requests over "
+          f"{trace.duration_s * 1e3:.1f}ms (from {path})", flush=True)
+
+    # -- determinism: two sync replays + one async must agree bitwise ------
+    rep1 = replay_trace(trace, knobs=DEFAULT_KNOBS)
+    rep2 = replay_trace(trace, knobs=DEFAULT_KNOBS)
+    rep_async = replay_trace(trace, knobs=DEFAULT_KNOBS, async_mode=True)
+    deterministic = (rep1.digest == rep2.digest == rep_async.digest
+                     and rep1.schedule == rep2.schedule == rep_async.schedule
+                     and rep1.result_crcs == rep2.result_crcs
+                     == rep_async.result_crcs)
+    print(f"[replay] digests sync={rep1.digest},{rep2.digest} "
+          f"async={rep_async.digest} deterministic={deterministic}",
+          flush=True)
+
+    # -- correctness: replayed results == sequential one-shot oracle -------
+    events = trace.materialized()
+    oracle_crcs = _sequential_oracle(events)          # also warms caches
+    matches_oneshot = oracle_crcs == rep1.result_crcs
+
+    # -- machine-relative throughput floor (both sides warm) ---------------
+    seq_s = _best_of(lambda: _sequential_oracle(events), iters)
+    replay_best = min(replay_trace(trace, knobs=DEFAULT_KNOBS).wall_s
+                      for _ in range(max(1, iters)))
+    default_qps = trace.n_requests / max(replay_best, 1e-12)
+    seq_qps = trace.n_requests / max(seq_s, 1e-12)
+    throughput_ok = default_qps >= REPLAY_FLOOR * seq_qps
+    print(f"[replay] default knobs {default_qps:.1f} q/s vs sequential "
+          f"{seq_qps:.1f} q/s (floor {REPLAY_FLOOR}x -> "
+          f"{'ok' if throughput_ok else 'REGRESSION'})", flush=True)
+
+    # -- closed loop: autotuned knobs must not lose to the defaults --------
+    tuned = autotune(trace, smoke=smoke, rounds=autotune_rounds,
+                     verbose=False)
+    win = tuned["winner"]
+    if win["knobs"] == DEFAULT_KNOBS:
+        beats_default = True
+        tuned_qps = default_qps
+    else:
+        tuned_best = min(replay_trace(trace, knobs=win["knobs"]).wall_s
+                         for _ in range(max(1, iters)))
+        tuned_qps = trace.n_requests / max(tuned_best, 1e-12)
+        beats_default = tuned_qps >= AUTOTUNE_TOLERANCE * default_qps
+    print(f"[replay] autotuned {win['knobs']} -> {tuned_qps:.1f} q/s "
+          f"({tuned_qps / max(default_qps, 1e-12):.2f}x default)",
+          flush=True)
+
+    table = {
+        "trace": {"name": trace.name, "path": path,
+                  "requests": trace.n_requests,
+                  "duration_s": trace.duration_s},
+        "digest": rep1.digest,
+        "digest_async": rep_async.digest,
+        "counters": rep1.counters,
+        "schedule_len": len(rep1.schedule),
+        "default_knobs": dict(DEFAULT_KNOBS),
+        "default_qps": default_qps,
+        "sequential_qps": seq_qps,
+        "replay_floor": REPLAY_FLOOR,
+        "autotuned_knobs": win["knobs"],
+        "autotuned_qps": tuned_qps,
+        "autotune_improvement": tuned["improvement"],
+        "lat_p50_s": rep1.lat_p50_s,
+        "lat_p99_s": rep1.lat_p99_s,
+        "_replay_deterministic": deterministic,
+        "_replay_matches_oneshot": matches_oneshot,
+        "_replay_throughput_ok": throughput_ok,
+        "_autotuned_beats_default": beats_default,
+    }
+    out = save("replay_grid", table)
+    print(f"[replay] wrote {out}", flush=True)
+    return table
+
+
+def export_golden(path: str = None) -> str:
+    """Regenerate the canonical golden trace (fixed parameters/seed)."""
+    trace = synthesize_trace(name="golden_v1", n=96, n_structs=3,
+                             queries=48, mean_gap_ms=0.5, seed=7)
+    return trace.save(path or golden_trace_path())
+
+
+if __name__ == "__main__":
+    run()

@@ -169,6 +169,38 @@ def main():
     sizes = {k: v["size"] for k, v in caches.cache_info().items()}
     print("caches:", sizes)                       # caches.clear_all() empties
 
+    # --- 9. record -> replay -> autotune the serving knobs -----------------
+    # Capture real traffic with a recorder on the engine, replay it
+    # deterministically under a virtual clock (bit-identical bucket
+    # schedule + byte-exact results, sync or async), then search the knob
+    # grid against the replayed stream and pin the winner:
+    #
+    #     python -m repro.autotune                # golden trace, full grid
+    #     python -m repro.autotune --smoke        # CI-sized search
+    #
+    from repro.serving import TraceRecorder, Trace, replay_trace
+    from repro.serving.trace import spec_inline
+    rec = TraceRecorder(name="quickstart")
+    with QueryEngine(recorder=rec, cache_results=False) as engine:
+        # register_operand(obj, spec) records a generator spec instead of
+        # inlining bytes; unregistered operands embed base64 CSR payloads
+        rec.register_operand(A_c, spec_inline(A_c))
+        for s in range(4):
+            engine.submit(fresh_values(A_c, s), B_c, M_c)
+        engine.flush()
+    trace = Trace.loads(rec.trace().dumps())      # JSONL round-trip
+    r1 = replay_trace(trace)
+    r2 = replay_trace(trace, async_mode=True)
+    print("replay digests (sync == async):", r1.digest, r2.digest,
+          "| qps:", round(r1.qps, 1))
+    # the autotuner ranks knob configs by replayed throughput/latency and
+    # writes results/profiles/serving_<backend>.json with the same
+    # cost_model_token staleness guard the plan caches use; serve with:
+    #     from repro.tuning.autotune import load_serving_knobs
+    #     engine = QueryEngine(**load_serving_knobs())
+    # and CI replays the committed golden trace as a perf-regression gate
+    # (python -m benchmarks.run --smoke --strict --only replay).
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,11 @@
+"""``python -m repro.autotune`` — serving-knob autotuning entry point.
+
+Thin shim over :mod:`repro.tuning.autotune` (mirrors ``repro.tune`` /
+``repro.tuning.cli``): replay a recorded traffic trace deterministically,
+search the ``QueryEngine`` knob grid, pin the winner under
+``results/profiles/``.
+"""
+from repro.tuning.autotune import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

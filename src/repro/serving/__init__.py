@@ -11,12 +11,17 @@ from .batcher import Batcher, Request, bucket_key, merge_planned
 from .burst import BurstProgram, burst_eligible, get_program
 from .cache import (ResultCache, content_fingerprint, result_key,
                     value_fingerprint)
+from .clock import SystemClock, VirtualClock
 from .engine import QueryEngine, Ticket
 from .metrics import ServeMetrics
+from .trace import (ReplayReport, Trace, TraceError, TraceRecorder,
+                    golden_trace_path, replay_trace, synthesize_trace)
 
 __all__ = [
-    "Batcher", "BurstProgram", "QueryEngine", "Request", "ResultCache",
-    "ServeMetrics", "Ticket", "bucket_key", "burst_eligible",
-    "content_fingerprint", "get_program", "merge_planned", "result_key",
-    "value_fingerprint",
+    "Batcher", "BurstProgram", "QueryEngine", "ReplayReport", "Request",
+    "ResultCache", "ServeMetrics", "SystemClock", "Ticket", "Trace",
+    "TraceError", "TraceRecorder", "VirtualClock", "bucket_key",
+    "burst_eligible", "content_fingerprint", "get_program",
+    "golden_trace_path", "merge_planned", "replay_trace", "result_key",
+    "synthesize_trace", "value_fingerprint",
 ]

@@ -119,8 +119,17 @@ class Batcher:
                     out.append(bucket)
         return out
 
+    def has_aged(self, max_wait_s: float,
+                 now: Optional[float] = None) -> bool:
+        """True when some bucket's oldest request has waited >= ``max_wait_s``
+        (what ``pop_aged`` would drain) — the engine's quiescence probe."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            return any(now - b[0].submitted_at >= max_wait_s
+                       for b in self._buckets.values())
+
     def next_deadline(self) -> Optional[float]:
-        """perf_counter time of the oldest queued request (None if empty)."""
+        """Clock time of the oldest queued request (None if empty)."""
         with self._lock:
             if not self._buckets:
                 return None

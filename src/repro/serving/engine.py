@@ -45,6 +45,7 @@ from repro.core.semiring import Semiring, PLUS_TIMES
 from . import burst
 from .batcher import Batcher, Request, mesh_key, merge_planned
 from .cache import ResultCache, content_fingerprint, value_fingerprint
+from .clock import SystemClock
 from .metrics import ServeMetrics
 
 
@@ -95,10 +96,19 @@ class QueryEngine:
                  queue_cap: int = 1024, async_mode: bool = False,
                  merge_same_shape: bool = True, pad_factor: float = 4.0,
                  result_cache: Optional[ResultCache] = None,
-                 cache_results: bool = True, use_burst: bool = True):
+                 cache_results: bool = True, use_burst: bool = True,
+                 clock=None, recorder=None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if queue_cap < max_batch:
             raise ValueError(f"queue_cap ({queue_cap}) must be >= "
                              f"max_batch ({max_batch})")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        if pad_factor < 1:
+            raise ValueError(f"pad_factor must be >= 1, got {pad_factor} "
+                             f"(1 disables width merging, it cannot shrink "
+                             f"widths)")
         self.async_mode = async_mode
         self.max_wait_s = max_wait_ms / 1e3
         self.queue_cap = queue_cap
@@ -106,13 +116,24 @@ class QueryEngine:
         self.pad_factor = pad_factor
         self.cache_results = cache_results
         self.use_burst = use_burst
+        #: every time-dependent decision reads this clock; a VirtualClock
+        #: here makes the flush schedule a pure function of the submissions
+        #: (trace replay, deflaked timing tests)
+        self.clock = clock if clock is not None else SystemClock()
+        #: trace recorder (``serving.trace.TraceRecorder``) — observes every
+        #: submit; None = no capture
+        self.recorder = recorder
         self.metrics = ServeMetrics()
         self._owns_results = result_cache is None
         self.results = (result_cache if result_cache is not None
                         else ResultCache())
         self._batcher = Batcher(max_batch=max_batch)
         self._exec_lock = threading.Lock()
-        self._space = threading.Condition()
+        # RLock: the worker holds _space while draining ready + aged work in
+        # one atomic step (quiesce() must never observe the half-taken state)
+        self._space = threading.Condition(threading.RLock())
+        self.clock.attach(self._space)
+        self._busy = False
         #: full buckets awaiting the worker (async mode only) — kept out of
         #: the batcher so new same-key requests start a fresh bucket, but
         #: still counted against queue_cap for backpressure
@@ -138,6 +159,7 @@ class QueryEngine:
                 self._space.notify_all()
             self._worker.join(timeout=5.0)
             self._worker = None
+        self.clock.detach(self._space)
         if self._owns_results:
             self.results.unregister()
 
@@ -162,6 +184,11 @@ class QueryEngine:
         """
         ticket = Ticket(self)
         self.metrics.record_submit()
+        submitted_at = self.clock.now()
+        if self.recorder is not None:
+            self.recorder.on_submit(A, B, M, t=submitted_at,
+                                    semiring=semiring, complement=complement,
+                                    algorithm=algorithm, mesh=mesh, axis=axis)
         key = bkey = None
         if (isinstance(A, CSR) and isinstance(B, CSR)
                 and isinstance(M, CSR)):
@@ -189,7 +216,7 @@ class QueryEngine:
         req = Request(A=A, B=B, M=M, semiring=semiring,
                       complement=complement, algorithm=algorithm, mesh=mesh,
                       axis=axis, ticket=ticket, post=post, cache_key=key,
-                      key=bkey)
+                      key=bkey, submitted_at=submitted_at)
         self._admit(req)
         return ticket
 
@@ -267,6 +294,51 @@ class QueryEngine:
         with self._space:
             self._space.notify_all()
 
+    def flush_due(self) -> int:
+        """Execute exactly the work the async worker's policy would execute
+        NOW: full buckets plus buckets older than ``max_wait_ms`` at the
+        clock's current time.  This is the sync-mode replay step — calling
+        it after each virtual-clock advance reproduces the async worker's
+        flush schedule deterministically.  Returns the number of requests
+        served."""
+        work = self._take_ready() + self._batcher.pop_aged(
+            self.max_wait_s, now=self.clock.now())
+        if not work:
+            return 0
+        self._execute_many(work)
+        with self._space:
+            self._space.notify_all()
+        return sum(len(b) for b in work)
+
+    def next_flush_deadline(self) -> Optional[float]:
+        """Clock time at which the oldest queued bucket becomes due
+        (None when nothing is queued).  Replay drives the virtual clock
+        through these deadlines."""
+        d = self._batcher.next_deadline()
+        return None if d is None else d + self.max_wait_s
+
+    def quiesce(self, timeout: float = 30.0) -> None:
+        """Block until no *due* work remains: the ready queue is empty, the
+        worker is idle, and no bucket has outlived ``max_wait_ms`` at the
+        clock's current time.  The async replay barrier — after each submit
+        or virtual-clock advance it guarantees the worker has consumed
+        every decision the new time implies before the trace proceeds.
+        Pending-but-not-due buckets stay queued.  Sync engines serve due
+        work inline."""
+        if not self.async_mode:
+            self.flush_due()
+            return
+        end = time.monotonic() + timeout
+        with self._space:
+            while (self._ready or self._busy
+                   or self._batcher.has_aged(self.max_wait_s,
+                                             now=self.clock.now())):
+                if time.monotonic() >= end:
+                    raise TimeoutError(
+                        "engine did not quiesce within "
+                        f"{timeout}s (worker stuck or stopped?)")
+                self._space.wait(timeout=0.05)
+
     def _worker_loop(self) -> None:
         while True:
             with self._space:
@@ -278,17 +350,25 @@ class QueryEngine:
                 # max-wait deadline
                 wait = (None if deadline is None else
                         max(0.0, deadline + self.max_wait_s
-                            - time.perf_counter()))
+                            - self.clock.now()))
                 if not self._ready and (wait is None or wait > 0):
-                    self._space.wait(timeout=wait)
+                    self.clock.wait_on(self._space, wait)
                 if self._stop:
                     return
-            work = self._take_ready() + self._batcher.pop_aged(
-                self.max_wait_s)
+                # take ready + aged work and mark busy in ONE _space
+                # critical section (RLock): quiesce() must never see the
+                # gap between "popped" and "executing"
+                work = self._take_ready() + self._batcher.pop_aged(
+                    self.max_wait_s, now=self.clock.now())
+                if work:
+                    self._busy = True
             if work:
-                self._execute_many(work)
-                with self._space:
-                    self._space.notify_all()
+                try:
+                    self._execute_many(work)
+                finally:
+                    with self._space:
+                        self._busy = False
+                        self._space.notify_all()
 
     # -- execution ----------------------------------------------------------
 
@@ -348,8 +428,12 @@ class QueryEngine:
         """Serve one bucket: every request shares structure (or, merged,
         shape + algorithm), so one plan covers all of them."""
         rep = reqs[0]
-        t_in = time.perf_counter()
+        # queue wait is CLOCK time (virtual under replay — deterministic);
+        # execution is always a real duration (it is a measurement, not a
+        # scheduling decision)
+        t_in = self.clock.now()
         queue_wait = t_in - min(r.submitted_at for r in reqs)
+        t_exec = time.perf_counter()
         with self._exec_lock:
             try:
                 if rep.mesh is not None:
@@ -360,11 +444,12 @@ class QueryEngine:
             except Exception as e:
                 self._fail_bucket(reqs, e)
                 return
-            exec_s = time.perf_counter() - t_in
+            exec_s = time.perf_counter() - t_exec
         self.metrics.record_bucket(
             size=len(reqs), algorithm=algo, route=route,
             queue_wait_s=queue_wait, plan_s=plan_s, exec_s=exec_s,
-            merged_from=merged_from)
+            merged_from=merged_from,
+            latencies_s=[(t_in - r.submitted_at) + exec_s for r in reqs])
         # Only uniform buckets' results are cached: width-merged buckets
         # return results padded to the MERGED width, not the shape a fresh
         # one-shot computation produces, and a hit must be byte-exact.

@@ -10,10 +10,25 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 #: per-bucket records kept for inspection (ring buffer, oldest dropped)
 BUCKET_LOG_CAPACITY = 256
+
+#: per-request latency samples kept for percentile reporting (ring buffer)
+LATENCY_RESERVOIR_CAPACITY = 65536
+
+#: snapshot() keys that are pure functions of the request stream and the
+#: engine's scheduling decisions — no wall-clock durations.  The replay
+#: determinism contract (``serving.trace``) compares exactly these.
+DETERMINISTIC_KEYS = ("submitted", "completed", "failed",
+                      "result_cache_hits", "buckets_executed",
+                      "batched_requests", "mean_batch", "max_batch",
+                      "merged_groups")
+
+#: bucket-log keys that are scheduling decisions, not timings — the
+#: replayed bucket *schedule* is built from these
+SCHEDULE_KEYS = ("size", "algorithm", "route", "merged_from", "label")
 
 
 class ServeMetrics:
@@ -37,6 +52,7 @@ class ServeMetrics:
             self.exec_s = 0.0
             self.merged_groups = 0
             self._bucket_log: deque = deque(maxlen=BUCKET_LOG_CAPACITY)
+            self._latencies: deque = deque(maxlen=LATENCY_RESERVOIR_CAPACITY)
 
     # -- recording ----------------------------------------------------------
 
@@ -56,14 +72,19 @@ class ServeMetrics:
     def record_bucket(self, *, size: int, algorithm: str, route: str,
                       queue_wait_s: float, plan_s: float, exec_s: float,
                       merged_from: int = 1,
-                      label: Optional[str] = None) -> None:
+                      label: Optional[str] = None,
+                      latencies_s: Optional[Sequence[float]] = None) -> None:
         """One executed bucket: ``size`` requests served by one plan.
 
         ``queue_wait_s`` is the oldest member's submit-to-execute wait;
         ``plan_s`` covers planning + bucket bookkeeping, ``exec_s`` the
         product itself (host prep + device, blocked until ready).
+        ``latencies_s`` carries each member's submit-to-served latency
+        (queue wait + execution) for the percentile reservoir.
         """
         with self._lock:
+            if latencies_s is not None:
+                self._latencies.extend(float(x) for x in latencies_s)
             self.buckets_executed += 1
             self.batched_requests += size
             self.completed += size
@@ -81,10 +102,24 @@ class ServeMetrics:
 
     # -- reading ------------------------------------------------------------
 
+    @staticmethod
+    def _percentile(samples: List[float], q: float) -> float:
+        """Nearest-rank percentile (no numpy import on the serve path)."""
+        if not samples:
+            return 0.0
+        ordered = sorted(samples)
+        idx = min(len(ordered) - 1, max(0, int(round(
+            q / 100.0 * (len(ordered) - 1)))))
+        return ordered[idx]
+
     def snapshot(self) -> Dict:
         with self._lock:
+            lat = list(self._latencies)
             done = self.buckets_executed
             return {
+                "lat_count": len(lat),
+                "lat_p50_s": self._percentile(lat, 50.0),
+                "lat_p99_s": self._percentile(lat, 99.0),
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
@@ -103,3 +138,18 @@ class ServeMetrics:
     def bucket_log(self):
         with self._lock:
             return list(self._bucket_log)
+
+    def deterministic_snapshot(self) -> Dict:
+        """The scheduling-only projection of :meth:`snapshot`: counters that
+        are pure functions of the request stream + flush decisions, with
+        every wall-clock duration dropped.  Two replays of one trace must
+        produce EQUAL deterministic snapshots (``serving.trace``)."""
+        snap = self.snapshot()
+        return {k: snap[k] for k in DETERMINISTIC_KEYS}
+
+    def bucket_schedule(self) -> List[Dict]:
+        """The bucket log's scheduling-only projection (sizes, algorithms,
+        routes, merge arity — no timings), in execution order."""
+        with self._lock:
+            return [{k: row[k] for k in SCHEDULE_KEYS}
+                    for row in self._bucket_log]

@@ -33,10 +33,10 @@ __all__ = [
     "backend_signature", "lookup", "profile_dir", "profile_key",
     "profile_path", "register", "snapshot",
     # lazy submodules
-    "probes", "fit", "cli",
+    "probes", "fit", "cli", "autotune",
 ]
 
-_LAZY_SUBMODULES = ("probes", "fit", "cli")
+_LAZY_SUBMODULES = ("probes", "fit", "cli", "autotune")
 
 
 def __getattr__(name):

@@ -7,6 +7,7 @@ the same operands — including tile-elected plans, complemented masks, and
 result-cache replays.
 """
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -22,7 +23,7 @@ from repro.core.formats import (CSR, block_sparse, csr_from_dense,
 from repro.core.masked_spgemm import masked_spgemm
 from repro.core.planner import clear_plan_cache, plan
 from repro.core.semiring import MIN_PLUS, PLUS_TIMES
-from repro.serving import (Batcher, QueryEngine, ResultCache,
+from repro.serving import (Batcher, QueryEngine, ResultCache, VirtualClock,
                            content_fingerprint)
 from repro.serving.batcher import Request
 
@@ -50,6 +51,20 @@ def structure_pool():
 
 
 POOL = structure_pool()
+
+
+def drain_virtual(eng, tickets, timeout=60.0):
+    """Advance the engine's virtual clock past each flush deadline until
+    every ticket resolves.  Replaces the old real ``max_wait_ms`` sleeps:
+    partial buckets age by virtual time we control, so the async tests no
+    longer depend on wall-clock timing (the flake source)."""
+    end = time.monotonic() + timeout
+    while not all(t.done() for t in tickets):
+        assert time.monotonic() < end, "virtual drain timed out"
+        d = eng.next_flush_deadline()
+        if d is not None:
+            eng.clock.advance_to(max(d + 1e-9, eng.clock.now()))
+        time.sleep(0.002)       # let the worker act on the new time
 
 
 def assert_same_result(got, want, complement=False):
@@ -235,8 +250,10 @@ def test_sync_result_triggers_flush():
 def test_async_max_wait_flushes_partial_bucket():
     A, B, M = POOL[0]
     with QueryEngine(async_mode=True, max_wait_ms=10.0,
-                     cache_results=False) as eng:
+                     clock=VirtualClock(), cache_results=False) as eng:
         t = eng.submit(A, B, M)
+        assert not t.done()         # partial bucket, virtual time frozen
+        drain_virtual(eng, [t])     # age the bucket past max_wait_ms
         assert_same_result(t.result(timeout=30.0), masked_spgemm(A, B, M))
 
 
@@ -250,8 +267,12 @@ def test_backpressure_bounded_queue():
             assert_same_result(t.result(),
                                masked_spgemm(revalue(A, s), B, M))
     with QueryEngine(async_mode=True, max_batch=2, queue_cap=2,
-                     max_wait_ms=1.0, cache_results=False) as eng:
+                     max_wait_ms=1.0, clock=VirtualClock(),
+                     cache_results=False) as eng:
+        # full buckets drain through backpressure on their own; the final
+        # partial bucket ages by virtual time, not a real 1ms sleep
         ts = [eng.submit(revalue(A, s), B, M) for s in range(7)]
+        drain_virtual(eng, ts)
         for s, t in zip(range(7), ts):
             assert_same_result(t.result(timeout=30.0),
                                masked_spgemm(revalue(A, s), B, M))
@@ -309,6 +330,25 @@ def test_forced_tile_complement_raises_like_one_shot():
         eng.flush()
         with pytest.raises(NotImplementedError):
             t.result()
+
+
+def test_engine_rejects_invalid_knobs():
+    """Negative paths for every constructor knob the autotuner searches —
+    a bad config must fail loudly at construction, not misbehave mid-serve."""
+    with pytest.raises(ValueError, match="max_batch"):
+        QueryEngine(max_batch=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        QueryEngine(max_batch=-3)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        QueryEngine(max_wait_ms=-0.5)
+    with pytest.raises(ValueError, match="pad_factor"):
+        QueryEngine(pad_factor=0.99)
+    with pytest.raises(ValueError, match="queue_cap"):
+        QueryEngine(max_batch=8, queue_cap=4)
+    # boundary values are legal
+    for eng in (QueryEngine(max_batch=1, queue_cap=1),
+                QueryEngine(max_wait_ms=0.0), QueryEngine(pad_factor=1.0)):
+        eng.close()
 
 
 def test_engine_close_unregisters_owned_result_cache():
@@ -460,6 +500,37 @@ def test_lru_capacity_and_stats():
         caches.unregister("lru-under-test")
 
 
+def test_env_capacity_parsing(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_CAP", "7")
+    assert caches.env_capacity("REPRO_TEST_CAP", 9) == 7
+    monkeypatch.delenv("REPRO_TEST_CAP")
+    assert caches.env_capacity("REPRO_TEST_CAP", 9) == 9
+    monkeypatch.setenv("REPRO_TEST_CAP", "not-a-number")
+    with pytest.raises(ValueError, match="REPRO_TEST_CAP"):
+        caches.env_capacity("REPRO_TEST_CAP", 9)
+
+
+def test_result_cache_capacity_env_var(monkeypatch):
+    """$REPRO_RESULT_CACHE_CAP bounds a fresh engine's result cache; the
+    registry stats move with traffic; set_capacity evicts immediately."""
+    monkeypatch.setenv("REPRO_RESULT_CACHE_CAP", "3")
+    A, B, M = POOL[0]
+    with QueryEngine(max_batch=1) as eng:       # each submit flushes
+        assert caches.cache_info()[eng.results.name]["capacity"] == 3
+        for q in range(6):                      # 6 distinct contents > cap
+            eng.submit(revalue(A, 100 + q), B, M).result()
+        info = caches.cache_info()[eng.results.name]
+        assert len(eng.results) <= 3
+        assert info["misses"] >= 6              # each new content missed
+        hits_before = info["hits"]
+        t = eng.submit(revalue(A, 105), B, M)   # most recent -> cached
+        assert t.done()
+        assert (caches.cache_info()[eng.results.name]["hits"]
+                == hits_before + 1)
+        caches.set_capacity(eng.results.name, 1)
+        assert len(eng.results) <= 1            # shrink evicts immediately
+
+
 def test_result_cache_distinguishes_values_not_just_structure():
     A, B, M = POOL[0]
     A2 = revalue(A, 99)
@@ -477,11 +548,20 @@ def test_concurrent_submitters_async():
         results[cid] = t.result(timeout=60.0)
 
     with QueryEngine(async_mode=True, max_batch=4, max_wait_ms=2.0,
-                     cache_results=False) as eng:
+                     clock=VirtualClock(), cache_results=False) as eng:
         threads = [threading.Thread(target=client, args=(i,))
                    for i in range(8)]
         for th in threads:
             th.start()
+        # racing submitters can strand a partial bucket; age it virtually
+        # instead of waiting out a real max_wait_ms
+        end = time.monotonic() + 60.0
+        while any(th.is_alive() for th in threads):
+            assert time.monotonic() < end, "clients timed out"
+            d = eng.next_flush_deadline()
+            if d is not None:
+                eng.clock.advance_to(max(d + 1e-9, eng.clock.now()))
+            time.sleep(0.002)
         for th in threads:
             th.join(timeout=60.0)
     assert sorted(results) == list(range(8))
@@ -499,8 +579,9 @@ def test_trial_sized_async_stream_matches_one_shot():
     B = erdos_renyi(256, 2, seed=22)
     M = er_mask(256, 32, seed=23)
     with QueryEngine(async_mode=True, max_batch=8, max_wait_ms=1.0,
-                     cache_results=False) as eng:
+                     clock=VirtualClock(), cache_results=False) as eng:
         ts = [eng.submit(revalue(A, s), B, M) for s in range(16)]
+        drain_virtual(eng, ts)
         got = [t.result(timeout=60.0) for t in ts]
     for s, g in zip(range(16), got):
         assert_same_result(g, masked_spgemm(revalue(A, s), B, M))

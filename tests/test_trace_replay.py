@@ -1,0 +1,259 @@
+"""Trace capture/replay + knob autotuning (ISSUE 6).
+
+The replay contract: a recorded request stream replays to a bit-identical
+bucket schedule, identical deterministic counters, and byte-exact results
+— across repeated replays AND across sync/async engine modes.  The
+autotuner builds on that contract (configs are comparable because every
+config sees exactly the same traffic), and the serving-knob profile it
+pins carries the same cost-model staleness guard the plan caches use.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.formats import erdos_renyi, er_mask
+from repro.core.masked_spgemm import masked_spgemm
+from repro.serving import (QueryEngine, Trace, TraceError, TraceRecorder,
+                           VirtualClock, replay_trace, synthesize_trace)
+from repro.serving.trace import (GOLDEN_TRACE_NAME, _result_crc,
+                                 fingerprint_digest, golden_trace_path,
+                                 materialize, spec_er, spec_er_mask,
+                                 spec_inline)
+
+
+def tiny_trace(seed=0, queries=10, **kw):
+    return synthesize_trace(name=f"tiny-{seed}", n=48, n_structs=2,
+                            queries=queries, mean_gap_ms=0.3, seed=seed,
+                            **kw)
+
+
+# ---------------------------------------------------------------------------
+# schema / validation negative paths
+# ---------------------------------------------------------------------------
+
+
+def test_trace_rejects_wrong_schema_version():
+    text = tiny_trace().dumps()
+    lines = text.splitlines()
+    header = json.loads(lines[0])
+    header["schema"] = 99
+    with pytest.raises(TraceError, match="schema"):
+        Trace.loads("\n".join([json.dumps(header)] + lines[1:]))
+
+
+def test_trace_rejects_wrong_kind_and_garbage():
+    text = tiny_trace().dumps()
+    lines = text.splitlines()
+    header = json.loads(lines[0])
+    header["kind"] = "some-other-artifact"
+    with pytest.raises(TraceError, match="kind"):
+        Trace.loads("\n".join([json.dumps(header)] + lines[1:]))
+    with pytest.raises(TraceError):
+        Trace.loads("not json at all\n")
+    with pytest.raises(TraceError):
+        Trace.loads("")
+
+
+def test_trace_rejects_truncated_capture():
+    text = tiny_trace(queries=6).dumps()
+    lines = text.splitlines()
+    with pytest.raises(TraceError, match="requests"):
+        Trace.loads("\n".join(lines[:-2]) + "\n")   # drop 2 events
+
+
+def test_trace_rejects_decreasing_arrivals_and_bad_semiring():
+    tr = tiny_trace(queries=4)
+    tr.events[2]["t"] = tr.events[1]["t"] - 0.5
+    with pytest.raises(TraceError, match="non-decreasing"):
+        tr.validate()
+    tr2 = tiny_trace(queries=4)
+    tr2.events[0]["semiring"] = "no_such_semiring"
+    with pytest.raises(TraceError, match="semiring"):
+        tr2.validate()
+
+
+def test_materialize_rejects_fingerprint_drift():
+    tr = tiny_trace(queries=4)
+    tr.events[1]["fp"]["A"] = (tr.events[1]["fp"]["A"] + 1) & 0xFFFFFFFF
+    with pytest.raises(TraceError, match="fingerprint"):
+        tr.materialized()
+    # check=False replays anyway (debugging escape hatch)
+    assert len(tr.materialized(check=False)) == 4
+
+
+def test_inline_spec_roundtrips_byte_exact():
+    A = erdos_renyi(32, 3, seed=5)
+    back = materialize(spec_inline(A))
+    assert fingerprint_digest(back) == fingerprint_digest(A)
+    np.testing.assert_array_equal(back.data, A.data)
+    np.testing.assert_array_equal(back.indices, A.indices)
+    np.testing.assert_array_equal(back.indptr, A.indptr)
+
+
+# ---------------------------------------------------------------------------
+# capture: recorder hooked into QueryEngine.submit
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_captures_submit_stream_and_replays():
+    rec = TraceRecorder(name="unit-capture")
+    A = rec.register_operand(erdos_renyi(48, 3, seed=1),
+                             spec_er(48, 3, seed=1))
+    B = rec.register_operand(erdos_renyi(48, 3, seed=2),
+                             spec_er(48, 3, seed=2))
+    M = rec.register_operand(er_mask(48, 5, seed=3),
+                             spec_er_mask(48, 5, seed=3))
+    inline_a = erdos_renyi(48, 4, seed=9)      # unregistered -> inline spec
+    with QueryEngine(clock=VirtualClock(), recorder=rec,
+                     cache_results=False) as eng:
+        eng.submit(A, B, M)
+        eng.clock.advance(0.004)
+        eng.submit(inline_a, B, M, complement=True)
+        eng.flush()
+    tr = rec.trace()
+    assert tr.n_requests == 2
+    assert tr.events[0]["A"]["kind"] == "er"
+    assert tr.events[1]["A"]["kind"] == "inline"
+    assert tr.events[1]["complement"] is True
+    assert tr.events[0]["t"] == 0.0
+    assert tr.events[1]["t"] == pytest.approx(0.004)
+    # the captured stream round-trips through JSONL and replays
+    rep = replay_trace(Trace.loads(tr.dumps()))
+    assert rep.n_requests == 2 and rep.counters["failed"] == 0
+
+
+def test_recorder_rejects_mesh_requests():
+    import jax
+    from jax.sharding import Mesh
+    rec = TraceRecorder()
+    A, B, M = (erdos_renyi(32, 3, seed=1), erdos_renyi(32, 3, seed=2),
+               er_mask(32, 4, seed=3))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with QueryEngine(recorder=rec, cache_results=False) as eng:
+        with pytest.raises(TraceError, match="mesh"):
+            eng.submit(A, B, M, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# property: any recorded trace replays deterministically
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       queries=st.integers(4, 12),
+       max_batch=st.integers(2, 8),
+       max_wait_ms=st.sampled_from([0.0, 0.5, 2.0]))
+def test_any_trace_replays_deterministically(seed, queries, max_batch,
+                                             max_wait_ms):
+    trace = Trace.loads(tiny_trace(seed=seed, queries=queries).dumps())
+    knobs = dict(max_batch=max_batch, max_wait_ms=max_wait_ms)
+    sync1 = replay_trace(trace, knobs=knobs)
+    sync2 = replay_trace(trace, knobs=knobs)
+    asy = replay_trace(trace, knobs=knobs, async_mode=True)
+    assert sync1.digest == sync2.digest == asy.digest
+    assert sync1.schedule == sync2.schedule == asy.schedule
+    assert sync1.counters == sync2.counters == asy.counters
+    assert sync1.result_crcs == sync2.result_crcs == asy.result_crcs
+    assert sync1.counters["submitted"] == queries
+    assert (sync1.counters["completed"]
+            + sync1.counters["failed"]) == queries
+
+
+def test_replay_results_byte_equal_one_shot_oracle():
+    trace = tiny_trace(seed=11, queries=8)
+    rep = replay_trace(trace, knobs=dict(max_batch=4))
+    want = [_result_crc(masked_spgemm(A, B, M, semiring=kw["semiring"],
+                                      complement=kw["complement"],
+                                      algorithm=kw.get("algorithm")
+                                      or "auto"))
+            for (_t, A, B, M, kw) in trace.materialized()]
+    assert rep.result_crcs == want
+
+
+def test_golden_trace_is_committed_and_replays_bitwise():
+    path = golden_trace_path()
+    assert os.path.basename(path) == GOLDEN_TRACE_NAME
+    assert os.path.exists(path), "golden trace must be committed"
+    trace = Trace.load(path)
+    assert trace.n_requests >= 32
+    r1 = replay_trace(trace)
+    r2 = replay_trace(trace)
+    assert r1.digest == r2.digest
+    assert r1.result_crcs == r2.result_crcs
+    assert r1.counters["result_cache_hits"] > 0   # repeats hit the cache
+
+
+# ---------------------------------------------------------------------------
+# autotuner + serving-knob profile
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_one_round_winner_not_worse_than_default(tmp_path):
+    from repro.tuning.autotune import (DEFAULT_KNOBS, autotune, knob_grid,
+                                       load_serving_knobs,
+                                       save_serving_profile)
+    trace = tiny_trace(seed=21, queries=8)
+    assert knob_grid(smoke=True)[0] == DEFAULT_KNOBS   # default is in-grid
+    result = autotune(trace, smoke=True, rounds=1, verbose=False)
+    assert result["winner"]["qps"] >= result["default"]["qps"]
+    assert result["improvement"] >= 1.0
+    for knob in ("max_batch", "max_wait_ms", "pad_factor", "queue_cap"):
+        assert knob in result["winner"]["knobs"]
+    path = save_serving_profile(result, path=str(tmp_path / "knobs.json"))
+    knobs = load_serving_knobs(path)
+    assert knobs == result["winner"]["knobs"]
+    with QueryEngine(**knobs) as eng:               # knobs construct an engine
+        assert eng._batcher.max_batch == knobs["max_batch"]
+
+
+def test_serving_profile_staleness_guard(tmp_path):
+    from repro.tuning.autotune import (ServingProfileError, autotune,
+                                       load_serving_knobs,
+                                       load_serving_profile,
+                                       save_serving_profile,
+                                       serving_knobs_stale)
+    trace = tiny_trace(seed=22, queries=6)
+    result = autotune(trace, smoke=True, rounds=1, verbose=False)
+    path = save_serving_profile(result, path=str(tmp_path / "knobs.json"))
+    prof = load_serving_profile(path)
+    assert not serving_knobs_stale(prof)
+    raw = json.load(open(path))
+    raw["cost_model_token"] = "some-older-cost-model"
+    json.dump(raw, open(path, "w"))
+    assert serving_knobs_stale(load_serving_profile(path))
+    with pytest.raises(ServingProfileError, match="retune"):
+        load_serving_knobs(path)
+    assert load_serving_knobs(path, allow_stale=True) == prof["knobs"]
+    # schema / kind negatives
+    raw["schema"] = 99
+    json.dump(raw, open(path, "w"))
+    with pytest.raises(ServingProfileError, match="schema"):
+        load_serving_profile(path)
+    raw["schema"], raw["kind"] = 1, "not-knobs"
+    json.dump(raw, open(path, "w"))
+    with pytest.raises(ServingProfileError, match="profile"):
+        load_serving_profile(path)
+
+
+def test_committed_default_serving_profile_loads():
+    from repro.tuning.autotune import load_serving_profile
+    from repro.tuning.profile import profile_dir
+    path = os.path.join(profile_dir(), "serving_default.json")
+    assert os.path.exists(path), "serving_default.json must be committed"
+    prof = load_serving_profile(path)
+    assert prof["trace"]["name"] == "golden_v1"
+    with QueryEngine(**prof["knobs"]) as eng:
+        assert eng._batcher.max_batch == prof["knobs"]["max_batch"]
+
+
+def test_replay_registered_in_benchmark_order():
+    from benchmarks.run import ORDER
+    assert "replay" in ORDER

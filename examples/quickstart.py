@@ -201,6 +201,44 @@ def main():
     # and CI replays the committed golden trace as a perf-regression gate
     # (python -m benchmarks.run --smoke --strict --only replay).
 
+    # --- 10. the invariant linter: machine-checked correctness rules -------
+    #
+    # The hard-won rules from the PRs above are enforced statically by
+    # `repro.analysis` (AST-based, never imports your code):
+    #
+    #     PYTHONPATH=src python -m repro.lint                 # text report
+    #     PYTHONPATH=src python -m repro.lint --format=json   # CI gate
+    #     PYTHONPATH=src python -m repro.lint --list-rules
+    #     PYTHONPATH=src python -m repro.lint --only lock-discipline
+    #
+    # Six rules: no-densify (no to_dense on core/kernels/serving hot
+    # paths), clock-discipline (serving scheduling reads the injectable
+    # clock — replay determinism), cache-registry (every module cache
+    # registered in repro.caches — bounded memory), plan-cache-key
+    # (structure-derived keys carry cost_model_token() — stale-plan
+    # guard), lock-discipline (a lock-set race detector over the serving
+    # worker/submit paths), and jit-retrace (no mutable captures or
+    # per-call container literals at jax.jit boundaries).
+    #
+    # Intentional exceptions are in-code annotations with a mandatory
+    # reason — one escape name per rule, e.g.:
+    #
+    #     t0 = time.perf_counter()  # lint: clock-ok(duration measurement)
+    #     hit = cache.get(key)      # lint: plan-key-ok(structure-pure)
+    #     self._hits += 1           # lint: unlocked-ok(approximate stat)
+    #
+    # Findings can also be suppressed via the committed lint-baseline.json
+    # (fingerprints are anchored to line CONTENT, so editing a baselined
+    # line revives the finding) — but policy keeps serving/ and core/ at
+    # zero baseline entries, enforced by tests/test_lint.py.
+    import os
+
+    import repro.analysis
+    from repro.analysis import run_lint
+    pkg_root = os.path.dirname(os.path.dirname(repro.analysis.__file__))
+    findings = run_lint(pkg_root)
+    print("invariant linter findings on src/repro:", len(findings))
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,121 @@
+"""Rule 6 — jit-retrace: no mutable captures or per-call containers at
+``jax.jit`` boundaries.
+
+The recompile class the serving bucket caches exist to prevent: a
+``jax.jit`` trace is keyed by argument *structure* and bakes captured
+Python values in as constants.  Two hazards:
+
+* **mutable module state in the closure** — a jitted function reading a
+  module-level dict/list/set captures its contents at first trace;
+  later mutation (retuning a table, growing a registry) is silently
+  invisible, the stale-constant twin of the PR 4 stale-plan bug.  Pass
+  the data as an argument (retrace on change) or hash it into a static
+  argument.
+* **container literals at call sites** — calling a jitted function with
+  a fresh ``[...]``/``{...}`` literal makes the pytree structure part of
+  the trace key; every distinct length/keyset recompiles.  The serving
+  layer exists to amortize traces across a bucket — per-call containers
+  defeat it.
+
+Escapes: ``# lint: jit-ok(reason)`` (e.g. a module table that is frozen
+after import, or a literal whose shape is provably fixed).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from . import Rule, Site
+from ..engine import call_name
+
+CONTAINER_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                      ast.DictComp, ast.SetComp, ast.GeneratorExp)
+
+
+def _bound_names(fn) -> Set[str]:
+    """Names bound inside the function: params, assignments, imports,
+    nested defs, comprehension targets — reads of these are locals, not
+    module-state captures."""
+    out: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        out.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                out.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                out.add((a.asname or a.name).split(".")[0])
+    return out
+
+
+class JitRetraceRule(Rule):
+    name = "jit-retrace"
+    escape = "jit-ok"
+    severity = "warning"
+    description = ("jax.jit functions must not capture mutable module "
+                   "state; jitted call sites must not build container "
+                   "literals per call")
+
+    def applies_to(self, mod) -> bool:
+        return "tests" not in mod.parts
+
+    def check(self, mod, table) -> Iterator[Site]:
+        mutable_here = {q.rsplit(".", 1)[-1]: q
+                        for q in table.mutable_state.get(mod.module, ())}
+        # names imported from other scanned modules that are mutable there
+        imported_mutable: Set[str] = set()
+        for alias, full in mod.imports.items():
+            owner, _, leaf = full.rpartition(".")
+            if owner and full in table.mutable_state.get(owner, ()):
+                imported_mutable.add(alias)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and table._jit_decorated(mod, node):
+                yield from self._check_closure(mod, node, mutable_here,
+                                               imported_mutable)
+            elif isinstance(node, ast.Call) and \
+                    table.is_jitted_call(mod, node):
+                yield from self._check_call_site(node)
+
+    def _check_closure(self, mod, fn, mutable_here, imported_mutable
+                       ) -> Iterator[Site]:
+        bound = _bound_names(fn)
+        seen: Set[str] = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            name = node.id
+            if name in bound or name in seen:
+                continue
+            if name in mutable_here or name in imported_mutable:
+                seen.add(name)
+                yield self.at(node, (
+                    f"jit closure captures mutable module state `{name}`: "
+                    f"its contents are baked into the trace as constants — "
+                    f"later mutation is silently invisible (stale-constant "
+                    f"class).  Pass it as an argument or annotate "
+                    f"`# lint: jit-ok(reason)` if it is frozen after "
+                    f"import"))
+
+    def _check_call_site(self, node: ast.Call) -> Iterator[Site]:
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in args:
+            if isinstance(arg, ast.Starred):
+                arg = arg.value
+            if isinstance(arg, CONTAINER_LITERALS):
+                fname = call_name(node) or "<jitted>"
+                yield self.at(arg, (
+                    f"container literal built per call at jit boundary "
+                    f"`{fname}(...)`: each distinct structure retraces "
+                    f"and recompiles — hoist it, convert to an array, or "
+                    f"annotate `# lint: jit-ok(reason)` if its shape is "
+                    f"fixed"))
+                break

@@ -21,7 +21,7 @@ from __future__ import annotations
 import os
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 _registry_lock = threading.Lock()
 _registry: "OrderedDict[str, Dict[str, Callable]]" = OrderedDict()
@@ -95,8 +95,8 @@ def env_capacity(var: str, default: int) -> int:
     raw = os.environ.get(var, "")
     try:
         return int(raw) if raw else default
-    except ValueError:
-        raise ValueError(f"{var} must be an integer, got {raw!r}")
+    except ValueError as e:
+        raise ValueError(f"{var} must be an integer, got {raw!r}") from e
 
 
 class LRUCache:

@@ -26,13 +26,11 @@ wb = B-row pad.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .semiring import Semiring, PLUS_TIMES
+from .semiring import Semiring
 
 NOTALLOWED, ALLOWED, SET = 0, 1, 2
 

@@ -16,7 +16,7 @@ drops well below the unigram entropy) in the end-to-end example.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ adjacent to both; masking by L_{ij} keeps each triangle exactly once.
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

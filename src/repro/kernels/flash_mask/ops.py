@@ -12,15 +12,21 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import caches
+
 from .kernel import flash_mask_kernel, build_schedule
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=caches.env_capacity("REPRO_FLASH_SCHED_CAP",
+                                                 256))
 def _sched(s_q, s_k, bq, bk, causal, window, prefix, q_offset):
     qi, ki, flags = build_schedule(s_q, s_k, bq=bq, bk=bk, causal=causal,
                                    window=window, prefix=prefix,
                                    q_offset=q_offset)
     return jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(flags)
+
+
+caches.register_lru("flash-sched", _sched)
 
 
 @functools.partial(

@@ -26,9 +26,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Optional
-
-import jax
 
 from repro.launch.mesh import make_elastic_mesh
 

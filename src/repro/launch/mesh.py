@@ -6,7 +6,6 @@ launches see the actual TPU topology.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 

@@ -16,19 +16,16 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import set_mesh
 from repro.configs.base import get_config
 from repro.data.pipeline import SyntheticLM, batch_for
 from repro.launch.mesh import make_production_mesh, make_elastic_mesh
-from repro.models.common import filter_pspec, shardings_for
+from repro.models.common import shardings_for
 from repro.optim.adamw import AdamW
 from repro.train.checkpoint import CheckpointManager
-from repro.train.train_step import (TrainState, init_state, state_specs,
-                                    batch_specs, make_train_step)
+from repro.train.train_step import init_state, state_specs, make_train_step
 
 
 def run(arch: str, *, smoke: bool, steps: int, batch: int, seq: int,

@@ -20,11 +20,12 @@ ring-buffered) KV cache.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import caches
 
 from .common import pscan
 
@@ -77,7 +78,8 @@ def dense_masked_attention(q, k, v, *, causal=True, window=0, prefix=0,
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=caches.env_capacity("REPRO_ATTN_SCHED_CAP",
+                                                 256))
 def _balanced_schedule(s_q: int, s_k: int, bq: int, bk: int, causal: bool,
                        window: int, prefix: int, q_offset: int,
                        chunk: int = 8):
@@ -141,6 +143,9 @@ def _balanced_schedule(s_q: int, s_k: int, bq: int, bk: int, causal: bool,
             kv_ids[g, e] = kvb
             valid[g, e] = True
     return q_ids, scatter_ids, kv_ids, member, valid, E // steps
+
+
+caches.register_lru("attention-block-schedule", _balanced_schedule)
 
 
 def block_masked_attention(q, k, v, *, causal=True, window=0, prefix=0,

@@ -1,7 +1,6 @@
 """Shared model utilities: sharding helpers, norms, RoPE, initializers."""
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax

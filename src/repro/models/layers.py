@@ -6,8 +6,7 @@ time independent of depth).  Decode variants take/update caches.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ head_dim p, shared B/C of state size n (ngroups=1).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ tests/test_models.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

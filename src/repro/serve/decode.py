@@ -5,8 +5,6 @@ for every sequence in the batch against a seq_len-sized cache.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import OrderedDict
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -47,8 +46,11 @@ class Request:
     ticket: object
     post: Optional[Callable]          # applied to the raw result
     cache_key: Optional[tuple]
+    #: engine-clock time at submit — ALWAYS supplied by the engine, never
+    #: defaulted from wall clock here: a wall-clock fallback silently
+    #: breaks trace-replay determinism (PR 6) the day someone relies on it
+    submitted_at: float
     key: Optional[tuple] = None       # precomputed bucket key (engine)
-    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
 
 
 def mesh_key(mesh, axis: str) -> Optional[tuple]:
@@ -88,6 +90,10 @@ class Batcher:
         (the caller executes it), else None."""
         key = req.key if req.key is not None else bucket_key(req)
         with self._lock:
+            # bucket keys are transient routing: every bucket drains within
+            # one flush, so no entry can outlive a cost-model change; the
+            # PLAN for the bucket is looked up token-keyed at execute time
+            # lint: plan-key-ok(transient routing, drains within one flush)
             bucket = self._buckets.setdefault(key, [])
             bucket.append(req)
             self._pending += 1
@@ -105,10 +111,10 @@ class Batcher:
             self._pending = 0
         return out
 
-    def pop_aged(self, max_wait_s: float,
-                 now: Optional[float] = None) -> List[List[Request]]:
-        """Drain buckets whose oldest request has waited >= ``max_wait_s``."""
-        now = time.perf_counter() if now is None else now
+    def pop_aged(self, max_wait_s: float, now: float) -> List[List[Request]]:
+        """Drain buckets whose oldest request has waited >= ``max_wait_s``
+        at engine-clock time ``now`` (required: aging against wall clock
+        would break replay determinism)."""
         out = []
         with self._lock:
             for key in list(self._buckets):
@@ -119,11 +125,10 @@ class Batcher:
                     out.append(bucket)
         return out
 
-    def has_aged(self, max_wait_s: float,
-                 now: Optional[float] = None) -> bool:
+    def has_aged(self, max_wait_s: float, now: float) -> bool:
         """True when some bucket's oldest request has waited >= ``max_wait_s``
-        (what ``pop_aged`` would drain) — the engine's quiescence probe."""
-        now = time.perf_counter() if now is None else now
+        at engine-clock time ``now`` (what ``pop_aged`` would drain) — the
+        engine's quiescence probe."""
         with self._lock:
             return any(now - b[0].submitted_at >= max_wait_s
                        for b in self._buckets.values())

@@ -193,15 +193,19 @@ def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
     from .cache import content_fingerprint
     key = (structure_signature(A), content_fingerprint(B),
            structure_signature(M), semiring.name, wm)
-    hit = _programs.get(key)
+    # a BurstProgram replays the gather/scatter pattern of the structure
+    # EXACTLY — it encodes no planner election, so it stays valid across
+    # calibration-profile changes; deliberately token-free so a retune
+    # does not flush compiled programs
+    hit = _programs.get(key)  # lint: plan-key-ok(structure-pure program)
     if hit is not None:
         return hit if hit is not _OVER_CAP else None
     try:
         prog = BurstProgram(A, B, M, semiring, wm)
     except _TooLarge:
-        _programs.put(key, _OVER_CAP)
+        _programs.put(key, _OVER_CAP)  # lint: plan-key-ok(structure-pure)
         return None
-    _programs.put(key, prog)
+    _programs.put(key, prog)  # lint: plan-key-ok(structure-pure program)
     return prog
 
 

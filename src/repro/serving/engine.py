@@ -247,7 +247,11 @@ class QueryEngine:
         return [t.result() for t in tickets]
 
     def _pending(self) -> int:
-        return self._batcher.pending + self._ready_count
+        # _space (RLock) also orders _ready_count against the worker's
+        # _take_ready decrement — an unlocked read could admit past the
+        # queue cap on a torn interleave
+        with self._space:
+            return self._batcher.pending + self._ready_count
 
     def _admit(self, req: Request) -> None:
         """Bounded-queue admission: block (async) or flush inline (sync)
@@ -328,12 +332,15 @@ class QueryEngine:
         if not self.async_mode:
             self.flush_due()
             return
-        end = time.monotonic() + timeout
+        # the watchdog deadline is real time BY DESIGN: it bounds how long
+        # we wait for the worker thread, not a scheduling decision, and
+        # must fire even when the virtual clock is frozen
+        end = time.perf_counter() + timeout  # lint: clock-ok(watchdog)
         with self._space:
             while (self._ready or self._busy
                    or self._batcher.has_aged(self.max_wait_s,
                                              now=self.clock.now())):
-                if time.monotonic() >= end:
+                if time.perf_counter() >= end:  # lint: clock-ok(watchdog)
                     raise TimeoutError(
                         "engine did not quiesce within "
                         f"{timeout}s (worker stuck or stopped?)")
@@ -381,7 +388,7 @@ class QueryEngine:
         for bucket in buckets:
             r = bucket[0]
             if r.mesh is None and r.algorithm is None:
-                t0 = time.perf_counter()
+                t0 = time.perf_counter()  # lint: clock-ok(plan duration)
                 try:
                     plan = planner.plan(r.A, r.B, r.M,
                                         complement=r.complement,
@@ -389,7 +396,8 @@ class QueryEngine:
                 except Exception as e:
                     self._fail_bucket(bucket, e)
                     continue
-                planned.append(((bucket, plan), time.perf_counter() - t0))
+                planned.append(  # lint: clock-ok(plan duration)
+                    ((bucket, plan), time.perf_counter() - t0))
             elif r.mesh is None and r.algorithm != "tile":
                 forced_row.append(bucket)
             else:
@@ -433,7 +441,7 @@ class QueryEngine:
         # scheduling decision)
         t_in = self.clock.now()
         queue_wait = t_in - min(r.submitted_at for r in reqs)
-        t_exec = time.perf_counter()
+        t_exec = time.perf_counter()  # lint: clock-ok(exec duration)
         with self._exec_lock:
             try:
                 if rep.mesh is not None:
@@ -444,7 +452,7 @@ class QueryEngine:
             except Exception as e:
                 self._fail_bucket(reqs, e)
                 return
-            exec_s = time.perf_counter() - t_exec
+            exec_s = time.perf_counter() - t_exec  # lint: clock-ok(exec duration)
         self.metrics.record_bucket(
             size=len(reqs), algorithm=algo, route=route,
             queue_wait_s=queue_wait, plan_s=plan_s, exec_s=exec_s,

@@ -12,7 +12,7 @@ compressed path runs the DP reduction *explicitly* under shard_map:
 """
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -7,13 +7,11 @@ attention keeps flops at the mask-admitted tiles).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T

@@ -1,0 +1,8 @@
+"""Silent: the registration for _cross_memo lives in registry.py —
+the check is cross-module."""
+import functools
+
+
+@functools.lru_cache(maxsize=32)
+def _cross_memo(x):
+    return x - 1

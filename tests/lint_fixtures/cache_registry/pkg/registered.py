@@ -1,0 +1,24 @@
+"""Silent cases: same-module registration, LRUCache, annotated escape."""
+import functools
+
+from repro import caches
+
+_programs = caches.LRUCache("fixture-programs", 8)    # self-registering
+
+
+@functools.lru_cache(maxsize=64)
+def _local_memo(x):
+    return x + 1
+
+
+caches.register_lru("fixture-local-memo", _local_memo)
+
+# a bounded worktable that is deliberately not a registered cache
+_SCRATCH_MEMO = {}  # lint: cache-ok(bounded worktable, cleared per call)
+
+
+def scratch(key, value):
+    _SCRATCH_MEMO[key] = value
+    out = _SCRATCH_MEMO.get(key)
+    _SCRATCH_MEMO.clear()
+    return out

@@ -1,0 +1,6 @@
+"""Registers caches defined in sibling modules."""
+from repro import caches
+
+from .cross import _cross_memo
+
+caches.register_lru("fixture-cross-memo", _cross_memo)

@@ -1,0 +1,16 @@
+"""Firing cases: module caches invisible to repro.caches."""
+import functools
+
+_result_cache = {}                               # finding (line 4)
+
+
+@functools.lru_cache(maxsize=128)                # finding (line 7/8)
+def _memo(x):
+    return x * 2
+
+
+def lookup(key):
+    hit = _result_cache.get(key)
+    if hit is None:
+        hit = _result_cache[key] = _memo(key)
+    return hit

@@ -1,0 +1,24 @@
+"""Clock-discipline cases in a serving/ module."""
+import time
+from time import monotonic                       # finding (line 3)
+
+
+def flush_deadline(max_wait_s):
+    # forbidden even WITH an annotation: scheduling from wall time
+    # cannot be replayed
+    return time.monotonic() + max_wait_s  # lint: clock-ok(still fires, l9)
+
+
+def backoff():
+    time.sleep(0.05)                             # finding (line 13)
+
+
+def bare_use():
+    return monotonic()                           # finding (line 17)
+
+
+def measured_section():
+    t0 = time.perf_counter()  # lint: clock-ok(duration measurement)
+    work = t0 * 2
+    return time.perf_counter() - work            # finding (line 23): the
+    # second read is NOT annotated — annotations are per-site

@@ -1,0 +1,17 @@
+"""Firing cases: dense materialization on a hot (core/) path."""
+
+
+def spgemm_via_dense(a, b, m):
+    dense = a.to_dense() @ b.to_dense()          # 2 findings (line 5)
+    return dense * m.toarray()                   # 1 finding  (line 6)
+
+
+def debug_dump(a):
+    # measurement escape hatch: annotated sites are allowed
+    return a.to_dense()  # lint: densify-ok(debug dump, not a hot path)
+
+
+class Tile:
+    def to_dense(self):
+        """Defining to_dense is fine — only calling it densifies."""
+        return None

@@ -1,0 +1,5 @@
+"""Silent: io/ is not a hot directory (core/kernels/serving only)."""
+
+
+def export_matrix(a):
+    return a.to_dense()

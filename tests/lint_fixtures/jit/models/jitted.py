@@ -1,0 +1,32 @@
+"""jit-retrace cases: mutable closure captures and per-call containers."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_TUNING_TABLE = {"block": 128}
+
+
+@jax.jit
+def stale_capture(x):
+    return x * _TUNING_TABLE["block"]            # finding (line 12): the
+    # table's contents are baked in at first trace
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def clean(x, n):
+    scale = jnp.float32(n)
+    return x * scale
+
+
+@jax.jit
+def frozen_capture(x):
+    # the table is frozen after import by convention
+    return x * _TUNING_TABLE["block"]  # lint: jit-ok(frozen after import)
+
+
+def caller(q):
+    bad = clean([q, q], 4)                       # finding (line 29): the
+    # list literal's length becomes part of the trace key
+    good = clean(q, 8)
+    return bad + good

@@ -1,0 +1,30 @@
+"""Firing case: the PR 5-style plan-cache race, in miniature.
+
+The worker thread installs plans into ``self._plans`` with no lock while
+``submit`` reads the same dict — two threads, disjoint (empty) lock
+sets, one side writing."""
+import threading
+
+
+class RacyEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._plans = {}
+        self._queue = []
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        daemon=True)
+        self._worker.start()
+
+    def _worker_loop(self):
+        while True:
+            with self._lock:
+                if not self._queue:
+                    continue
+                key = self._queue.pop()
+            self._plans[key] = object()          # finding (line 24): write
+            # outside the lock submit() reads under
+
+    def submit(self, key):
+        self._queue.append(key)                  # finding (line 28): the
+        # worker pops self._queue under self._lock; this append is bare
+        return self._plans.get(key)              # finding (line 30)

@@ -1,0 +1,37 @@
+"""Silent cases: both sides locked; annotated intentional races."""
+import threading
+
+
+class SafeEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._plans = {}
+        self._capacity = 8                       # init-only: exempt
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        daemon=True)
+        self._worker.start()
+
+    def _worker_loop(self):
+        while True:
+            with self._lock:
+                self._plans["k"] = object()
+
+    def submit(self, key):
+        with self._lock:
+            return self._plans.get(key, self._capacity)
+
+
+class AnnotatedEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        daemon=True)
+        self._worker.start()
+
+    def _worker_loop(self):
+        while True:
+            self._hits += 1  # lint: unlocked-ok(monotonic stat, torn read ok)
+
+    def submit(self):
+        return self._hits  # lint: unlocked-ok(approximate stat read)

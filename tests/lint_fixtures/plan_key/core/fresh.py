@@ -1,0 +1,27 @@
+"""Silent cases: token-carrying keys, annotated escapes, untainted keys."""
+from repro import caches
+from repro.core.planner import cost_model_token, structure_signature
+
+_plan_cache = caches.LRUCache("fixture-fresh-plans", 8)
+
+
+def lookup(a, m):
+    key = (structure_signature(a), structure_signature(m),
+           cost_model_token())
+    return _plan_cache.get(key)
+
+
+def lookup_via_local(a):
+    token = cost_model_token()
+    key = (structure_signature(a), token)
+    return _plan_cache.get(key)
+
+
+def structure_pure(a):
+    key = (structure_signature(a), "prep")
+    # host prep encodes no planner election — cost-model-invariant
+    return _plan_cache.get(key)  # lint: plan-key-ok(structure-pure prep)
+
+
+def untainted(name):
+    return _plan_cache.get(("static", name))

@@ -1,0 +1,23 @@
+"""Firing cases: structure-keyed cache access without the token."""
+from repro import caches
+from repro.core.planner import structure_signature
+
+_plan_cache = caches.LRUCache("fixture-stale-plans", 8)
+
+
+def lookup(a, m):
+    key = (structure_signature(a), structure_signature(m))
+    hit = _plan_cache.get(key)                   # finding (line 10)
+    if hit is None:
+        hit = object()
+        _plan_cache.put(key, hit)                # finding (line 13)
+    return hit
+
+
+def helper_lookup(a):
+    sig = structure_signature(a)
+    return plan_cache_get((sig, "row"))          # finding (line 19)
+
+
+def plan_cache_get(key):
+    return _plan_cache.get(key)                  # key is a param: untainted

@@ -1,0 +1,216 @@
+"""Tests for the ``repro.analysis`` invariant linter.
+
+Three layers:
+
+* fixture trees (``tests/lint_fixtures/<rule>/``): every rule has at
+  least one firing case and one silent case (allowlisted path, locked
+  access, registered cache, or annotated escape) — asserted by exact
+  ``(path, line)`` pairs, so engine changes cannot silently widen or
+  narrow a rule;
+* engine mechanics on temp trees: escapes need a non-empty reason,
+  baseline fingerprints are content-anchored (editing the line
+  invalidates the suppression), ``--only`` validates rule names;
+* self-hosting: ``python -m repro.lint`` over ``src/repro`` must exit 0,
+  and the committed baseline must contain NOTHING under ``serving/`` or
+  ``core/`` (zero-tolerance dirs — only in-code annotated escapes are
+  acceptable there).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import Baseline, rule_names, run_lint
+from repro.analysis.findings import split_by_baseline
+
+HERE = Path(__file__).resolve().parent
+REPO = HERE.parent
+FIXTURES = HERE / "lint_fixtures"
+
+
+def _sites(findings, rule):
+    return sorted((f.path, f.line) for f in findings if f.rule == rule)
+
+
+def _run(tree, rule):
+    return run_lint(FIXTURES / tree, only=[rule])
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_no_densify_fixture():
+    findings = _run("densify", "no-densify")
+    assert _sites(findings, "no-densify") == [
+        ("core/hot.py", 5),       # a.to_dense()
+        ("core/hot.py", 5),       # b.to_dense() — same line, 2nd call
+        ("core/hot.py", 6),       # m.toarray()
+    ]
+    # ref.py, io/ (not a hot dir), the annotated site, and the to_dense
+    # *definition* are all silent
+    assert not [f for f in findings if f.path != "core/hot.py"]
+
+
+def test_clock_discipline_fixture():
+    findings = _run("clock", "clock-discipline")
+    assert _sites(findings, "clock-discipline") == [
+        ("serving/sched.py", 3),    # from time import monotonic
+        ("serving/sched.py", 9),    # time.monotonic — fires even annotated
+        ("serving/sched.py", 13),   # time.sleep
+        ("serving/sched.py", 17),   # bare monotonic() use
+        ("serving/sched.py", 23),   # unannotated perf_counter
+    ]
+    # clock.py is exempt; the annotated perf_counter (line 21) is silent
+    assert not [f for f in findings if f.path == "serving/clock.py"]
+
+
+def test_clock_forbidden_calls_are_not_escapable():
+    # line 9 carries `# lint: clock-ok(...)` and STILL fires: wall-clock
+    # scheduling accepts no annotation
+    findings = _run("clock", "clock-discipline")
+    assert ("serving/sched.py", 9) in _sites(findings, "clock-discipline")
+
+
+def test_cache_registry_fixture():
+    findings = _run("cache_registry", "cache-registry")
+    assert _sites(findings, "cache-registry") == [
+        ("pkg/unregistered.py", 4),   # _result_cache dict
+        ("pkg/unregistered.py", 8),   # @lru_cache _memo
+    ]
+    # registered.py (same-module registration, LRUCache, annotated
+    # worktable) and cross.py (registered from registry.py) are silent
+    assert not [f for f in findings if f.path != "pkg/unregistered.py"]
+
+
+def test_plan_cache_key_fixture():
+    findings = _run("plan_key", "plan-cache-key")
+    assert _sites(findings, "plan-cache-key") == [
+        ("core/stale.py", 10),    # get(key) — tainted, tokenless
+        ("core/stale.py", 13),    # put(key, ...)
+        ("core/stale.py", 19),    # *cache_get helper with tainted key
+    ]
+    # fresh.py: token in key (direct + via local), annotated
+    # structure-pure site, untainted key — all silent
+    assert not [f for f in findings if f.path == "core/fresh.py"]
+
+
+def test_lock_discipline_fixture():
+    findings = _run("lock", "lock-discipline")
+    assert _sites(findings, "lock-discipline") == [
+        ("serving/racy.py", 21),   # _queue read under lock (vs bare append)
+        ("serving/racy.py", 23),   # _queue.pop under lock (vs bare append)
+        ("serving/racy.py", 24),   # _plans write, no lock (worker)
+        ("serving/racy.py", 28),   # _queue.append, no lock (submit)
+        ("serving/racy.py", 30),   # _plans read, no lock (submit)
+    ]
+    # safe.py: both sides locked, init-only attr, annotated stat — silent
+    assert not [f for f in findings if f.path == "serving/safe.py"]
+
+
+def test_jit_retrace_fixture():
+    findings = _run("jit", "jit-retrace")
+    assert _sites(findings, "jit-retrace") == [
+        ("models/jitted.py", 12),   # mutable module capture
+        ("models/jitted.py", 29),   # container literal at call site
+    ]
+    assert all(f.severity == "warning" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_escape_requires_nonempty_reason(tmp_path):
+    tree = tmp_path / "core"
+    tree.mkdir()
+    (tree / "x.py").write_text(
+        "def f(a):\n"
+        "    return a.to_dense()  # lint: densify-ok()\n")
+    findings = run_lint(tmp_path, only=["no-densify"])
+    assert _sites(findings, "no-densify") == [("core/x.py", 2)]
+
+
+def test_baseline_suppresses_then_line_edit_invalidates(tmp_path):
+    tree = tmp_path / "core"
+    tree.mkdir()
+    src = tree / "x.py"
+    src.write_text("def f(a):\n    return a.to_dense()\n")
+    findings = run_lint(tmp_path, only=["no-densify"])
+    assert len(findings) == 1
+
+    baseline = Baseline.from_findings(findings)
+    new, suppressed = split_by_baseline(findings, baseline)
+    assert (len(new), len(suppressed)) == (0, 1)
+
+    # same line number, different content: the fingerprint is anchored to
+    # the line TEXT, so the old suppression no longer applies
+    src.write_text("def f(a):\n    return a.to_dense().T\n")
+    findings2 = run_lint(tmp_path, only=["no-densify"])
+    new2, suppressed2 = split_by_baseline(findings2, baseline)
+    assert (len(new2), len(suppressed2)) == (1, 0)
+
+    # ...but pure line DRIFT (code inserted above) keeps the suppression
+    src.write_text("import os\n\n\ndef f(a):\n    return a.to_dense()\n")
+    findings3 = run_lint(tmp_path, only=["no-densify"])
+    new3, suppressed3 = split_by_baseline(findings3, baseline)
+    assert (len(new3), len(suppressed3)) == (0, 1)
+
+
+def test_baseline_roundtrip(tmp_path):
+    tree = tmp_path / "serving"
+    tree.mkdir()
+    (tree / "x.py").write_text("import time\ntime.sleep(1)\n")
+    findings = run_lint(tmp_path, only=["clock-discipline"])
+    assert findings
+    path = tmp_path / "baseline.json"
+    Baseline.from_findings(findings).save(path)
+    loaded = Baseline.load(path)
+    assert all(loaded.suppresses(f) for f in findings)
+
+
+def test_cli_rejects_unknown_rule():
+    from repro.lint import main
+    assert main(["--only", "no-such-rule", str(FIXTURES / "densify")]) == 2
+
+
+def test_cli_lists_all_six_rules(capsys):
+    from repro.lint import main
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for name in ("no-densify", "clock-discipline", "cache-registry",
+                 "plan-cache-key", "lock-discipline", "jit-retrace"):
+        assert name in out
+    assert set(rule_names()) == {
+        "no-densify", "clock-discipline", "cache-registry",
+        "plan-cache-key", "lock-discipline", "jit-retrace"}
+
+
+# ---------------------------------------------------------------------------
+# self-hosting: the repo must pass its own linter
+# ---------------------------------------------------------------------------
+
+
+def test_self_lint_is_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--format=json"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["counts"]["new"] == 0
+    assert set(report["rules"]) == set(rule_names())
+
+
+def test_no_baselined_findings_in_zero_tolerance_dirs():
+    """Policy: serving/ and core/ accept annotated in-code escapes but no
+    baseline entries — a baselined finding there is a dodged invariant."""
+    baseline_path = REPO / "lint-baseline.json"
+    assert baseline_path.exists()
+    data = json.loads(baseline_path.read_text())
+    for entry in data.get("findings", []):
+        path = entry.get("path", "")
+        assert "serving/" not in path and "core/" not in path, entry

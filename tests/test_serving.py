@@ -428,7 +428,8 @@ def test_batcher_buckets_by_structure_and_b_content():
     def req(a, bb, mm):
         return Request(A=a, B=bb, M=mm, semiring=PLUS_TIMES,
                        complement=False, algorithm=None, mesh=None,
-                       axis="data", ticket=None, post=None, cache_key=None)
+                       axis="data", ticket=None, post=None, cache_key=None,
+                       submitted_at=0.0)
 
     assert b.add(req(revalue(A, 1), B, M)) is None
     assert b.add(req(revalue(A, 2), B, M)) is None       # same bucket
@@ -595,3 +596,26 @@ def test_trial_sized_async_stream_matches_one_shot():
 def test_serve_registered_in_benchmark_order():
     from benchmarks.run import ORDER
     assert "serve" in ORDER
+
+
+def test_schedule_memos_registered_in_caches():
+    """The flash and attention schedule memos must be visible to the
+    registry: cache_info() reports them and clear_all() empties them
+    (the bounded-memory contract the cache-registry lint rule enforces)."""
+    import repro.kernels.flash_mask.ops as _fops          # noqa: F401
+    import repro.models.attention as _attn                # noqa: F401
+
+    info = caches.cache_info()
+    assert "flash-sched" in info
+    assert "attention-block-schedule" in info
+
+    _attn._balanced_schedule(256, 256, 128, 128, True, 0, 0, 0)
+    assert caches.cache_info()["attention-block-schedule"]["size"] >= 1
+    caches.clear_all()
+    assert caches.cache_info()["attention-block-schedule"]["size"] == 0
+    assert caches.cache_info()["flash-sched"]["size"] == 0
+
+
+def test_schedule_memo_capacity_env_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_SCHED_CAP", "7")
+    assert caches.env_capacity("REPRO_ATTN_SCHED_CAP", 256) == 7

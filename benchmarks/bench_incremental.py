@@ -1,0 +1,185 @@
+"""Incremental serving vs recompute-from-scratch on an edge-delta stream.
+
+Interleaves update batches with query batches against one burst-eligible
+structure and writes ``results/bench/incremental_grid.json``:
+
+* ``update`` — per-delta time-to-ready.  Incremental:
+  ``QueryEngine.submit_delta`` (apply + O(changed rows) signature update +
+  plan revalidation + lane patch + scoped result invalidation).
+  Recompute: apply the same delta, drop every structure-derived artifact
+  (plan cache, burst programs/patches/lineage), then cold-plan and
+  cold-build the burst program.  The compiled fold memo stays warm in
+  BOTH streams — the comparison is structure rebuild, not XLA retracing,
+  which is conservative toward the incremental path.
+* ``serve`` — the query batches riding between updates, answered from the
+  patched (resp. rebuilt) programs.  Every served result — both streams,
+  every round — must be bitwise-equal to the one-shot
+  ``masked_spgemm`` oracle on the post-delta operands.
+
+``_incremental_wins``: median update speedup >= INCREMENTAL_WIN with the
+per-round delta touching <= 1% of rows, and bitwise equality everywhere.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.formats import (CSR, CSRDelta, apply_csr_delta, erdos_renyi,
+                                er_mask)
+from repro.core.masked_spgemm import masked_spgemm
+from repro.core.planner import clear_plan_cache, plan
+from repro.core.semiring import PLUS_TIMES
+from repro.serving import QueryEngine, burst
+
+from .common import save
+
+#: incremental readiness must beat the recompute path by this factor
+INCREMENTAL_WIN = 5.0
+
+
+def _structure(n: int):
+    """Same regime as bench_serve's burst case: sparse inputs + dense
+    mask elect the scatter plan, which routes onto the burst program —
+    the artifact whose incremental patching is under test."""
+    return (erdos_renyi(n, 2, seed=100), erdos_renyi(n, 2, seed=200),
+            er_mask(n, max(8, n // 8), seed=300))
+
+
+def _revalue(x: CSR, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    return CSR(x.indptr, x.indices,
+               rng.uniform(0.5, 1.5, x.nnz).astype(np.float32), x.shape)
+
+
+def _delta_stream(n: int, rounds: int, k: int) -> List[CSRDelta]:
+    """One upsert batch per round, each touching k distinct rows (k/n is
+    the delta fraction).  Coordinate batches are pure data, so the same
+    stream replays identically through both serving modes."""
+    rng = np.random.default_rng(11)
+    out = []
+    for _ in range(rounds):
+        rows = rng.choice(n, size=k, replace=False).astype(np.int64)
+        cols = rng.integers(n, size=k).astype(np.int64)
+        vals = rng.uniform(0.5, 1.5, k).astype(np.float32)
+        out.append(CSRDelta.upserts(rows, cols, vals))
+    return out
+
+
+def _bitwise_equal(got, want) -> bool:
+    return (np.array_equal(np.asarray(got.vals), np.asarray(want.vals))
+            and np.array_equal(np.asarray(got.present),
+                               np.asarray(want.present))
+            and np.array_equal(np.asarray(got.mask_cols),
+                               np.asarray(want.mask_cols)))
+
+
+def _drop_structure_artifacts() -> None:
+    """What a delta invalidates when there is no incremental path: every
+    structure-keyed artifact.  (The jit fold memo survives — see module
+    docstring.)"""
+    clear_plan_cache()
+    burst._programs.clear()
+    burst._patches.clear()
+    burst._lineage.clear()
+
+
+def _serve_round(engine: QueryEngine, queries) -> List:
+    tickets = [engine.submit(A, B, M) for A, B, M in queries]
+    engine.flush()
+    return [t.result() for t in tickets]
+
+
+def run(n: int = 1024, rounds: int = 8, deltas_per_round: int = 4,
+        queries_per_round: int = 3) -> dict:
+    A0, B, M = _structure(n)
+    deltas = _delta_stream(n, rounds, deltas_per_round)
+
+    def queries_for(a: CSR, r: int):
+        return [(_revalue(a, 1000 * r + i), B, M)
+                for i in range(queries_per_round)]
+
+    # ---- incremental stream: submit_delta keeps the serving state warm
+    _drop_structure_artifacts()
+    eng = QueryEngine(max_batch=max(4, queries_per_round))
+    _serve_round(eng, queries_for(A0, 0))          # warm plan + program
+    a = A0
+    upd_inc, serve_inc, bitwise_ok = [], [], True
+    for r, d in enumerate(deltas, start=1):
+        t0 = time.perf_counter()
+        out = eng.submit_delta(a, B, M, delta_a=d)
+        upd_inc.append(time.perf_counter() - t0)
+        a = out.A
+        qs = queries_for(a, r)
+        t0 = time.perf_counter()
+        got = _serve_round(eng, qs)
+        serve_inc.append(time.perf_counter() - t0)
+        for g, q in zip(got, qs):
+            bitwise_ok &= _bitwise_equal(g, masked_spgemm(*q))
+    inc_metrics = eng.metrics.snapshot()
+
+    # ---- recompute stream: same deltas, structure state dropped per round
+    _drop_structure_artifacts()
+    eng2 = QueryEngine(max_batch=max(4, queries_per_round))
+    _serve_round(eng2, queries_for(A0, 0))
+    a = A0
+    upd_cold, serve_cold = [], []
+    for r, d in enumerate(deltas, start=1):
+        t0 = time.perf_counter()
+        res = apply_csr_delta(a, d)
+        a = res.csr
+        _drop_structure_artifacts()
+        p = plan(a, B, M)
+        burst.get_program(a, B, M, PLUS_TIMES, p.widths[2])
+        upd_cold.append(time.perf_counter() - t0)
+        qs = queries_for(a, r)
+        t0 = time.perf_counter()
+        got = _serve_round(eng2, qs)
+        serve_cold.append(time.perf_counter() - t0)
+        for g, q in zip(got, qs):
+            bitwise_ok &= _bitwise_equal(g, masked_spgemm(*q))
+
+    med_inc = float(np.median(upd_inc))
+    med_cold = float(np.median(upd_cold))
+    speedup = med_cold / med_inc if med_inc > 0 else float("inf")
+    e2e_inc = sum(upd_inc) + sum(serve_inc)
+    e2e_cold = sum(upd_cold) + sum(serve_cold)
+    delta_fraction = deltas_per_round / n
+
+    table = {
+        "n": n,
+        "rounds": rounds,
+        "deltas_per_round": deltas_per_round,
+        "queries_per_round": queries_per_round,
+        "delta_fraction": delta_fraction,
+        "update_ms": {
+            "incremental": [round(t * 1e3, 3) for t in upd_inc],
+            "recompute": [round(t * 1e3, 3) for t in upd_cold],
+            "median_incremental": round(med_inc * 1e3, 3),
+            "median_recompute": round(med_cold * 1e3, 3),
+            "speedup": round(speedup, 2),
+        },
+        "serve_ms": {
+            "incremental": [round(t * 1e3, 3) for t in serve_inc],
+            "recompute": [round(t * 1e3, 3) for t in serve_cold],
+        },
+        "end_to_end_speedup": round(e2e_cold / e2e_inc, 2) if e2e_inc else 0,
+        "metrics": {k: inc_metrics[k] for k in
+                    ("delta_applied", "plans_revalidated", "lanes_patched",
+                     "rows_invalidated")},
+        "_bitwise_ok": bool(bitwise_ok),
+        "_incremental_wins": bool(bitwise_ok
+                                  and delta_fraction <= 0.01
+                                  and speedup >= INCREMENTAL_WIN),
+    }
+    path = save("incremental_grid", table)
+    print(f"[bench_incremental] update {med_cold * 1e3:.2f} ms -> "
+          f"{med_inc * 1e3:.2f} ms ({speedup:.2f}x) at "
+          f"{100 * delta_fraction:.2f}% delta fraction, "
+          f"bitwise_ok={bitwise_ok} -> {path}")
+    return table
+
+
+if __name__ == "__main__":
+    run()

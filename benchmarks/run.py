@@ -15,8 +15,8 @@ import tempfile
 import time
 import traceback
 
-ORDER = ("density", "planner", "tile", "dist", "serve", "replay",
-         "triangle", "rmat", "scaling", "ktruss", "bc", "block")
+ORDER = ("density", "planner", "tile", "dist", "serve", "incremental",
+         "replay", "triangle", "rmat", "scaling", "ktruss", "bc", "block")
 
 
 def main() -> None:
@@ -53,9 +53,9 @@ def main() -> None:
         only = set(ORDER)
 
     from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
-                   bench_ktruss, bench_planner, bench_replay,
-                   bench_rmat_scale, bench_scaling, bench_serve, bench_tile,
-                   bench_triangle)
+                   bench_incremental, bench_ktruss, bench_planner,
+                   bench_replay, bench_rmat_scale, bench_scaling,
+                   bench_serve, bench_tile, bench_triangle)
     if args.smoke:
         density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
                           iters=3)
@@ -64,6 +64,10 @@ def main() -> None:
         dist_kw = dict(n=256, mesh_sizes=(2, 4), densities_b=(0.02, 0.3),
                        iters=1)
         serve_kw = dict(n=128, queries=16, n_structs=2, iters=2)
+        # trims rounds/queries but NOT n: the >=5x readiness win is
+        # scale-dependent (the cold rebuild it beats is O(mask nnz)), so
+        # shrinking the structure would fail --strict for the wrong reason
+        incremental_kw = dict(rounds=3, queries_per_round=2)
         # the golden trace is tiny; smoke trims timing iters + the knob grid
         replay_kw = dict(iters=1, smoke=True)
     else:
@@ -75,6 +79,8 @@ def main() -> None:
                                                 densities_b=(0.02, 0.3))
         serve_kw = dict(n=1024 if args.full else 512,
                         queries=96 if args.full else 48)
+        incremental_kw = dict(n=2048 if args.full else 1024,
+                              rounds=12 if args.full else 8)
         replay_kw = dict(iters=3, autotune_rounds=2 if args.full else 1)
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
@@ -82,6 +88,7 @@ def main() -> None:
         "tile": lambda: bench_tile.run(**tile_kw),
         "dist": lambda: bench_dist.run(**dist_kw),
         "serve": lambda: bench_serve.run(**serve_kw),
+        "incremental": lambda: bench_incremental.run(**incremental_kw),
         "replay": lambda: bench_replay.run(**replay_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(

@@ -239,6 +239,47 @@ def main():
     findings = run_lint(pkg_root)
     print("invariant linter findings on src/repro:", len(findings))
 
+    # --- 11. incremental serving: edge deltas without a cold restart -------
+    #
+    # Production graphs mutate under traffic.  `QueryEngine.submit_delta`
+    # folds a batch of edge upserts/deletes into the served operands and
+    # keeps every structure-derived artifact warm instead of rebuilding:
+    # the operand's incremental signature updates in O(changed rows), the
+    # plan REVALIDATES (kept while nnz/width drift stays inside the
+    # planner's hysteresis band), the compiled burst program's gather
+    # lanes are patched only in the changed rows' slot columns (bitwise-
+    # equal to a cold rebuild, by construction), and result-cache entries
+    # are dropped only for the delta'd structure x affected row range —
+    # entries for other structures, or rows the delta provably cannot
+    # reach, stay cached.
+    from repro.core.formats import CSRDelta
+    d_engine = QueryEngine(max_batch=8)
+    A_d, B_d, M_d = A_c, B_c, M_c                 # the section-9 operands
+    d_engine.submit(A_d, B_d, M_d)
+    d_engine.flush()                              # warm plan + program
+    delta = CSRDelta.upserts([0, 3], [5, 7], [1.5, 0.25])
+    out = d_engine.submit_delta(A_d, B_d, M_d, delta_a=delta)
+    A_d = out.A                                   # post-delta operand
+    snap = d_engine.metrics.snapshot()
+    print("delta:", {k: snap[k] for k in
+                     ("delta_applied", "plans_revalidated",
+                      "lanes_patched", "rows_invalidated")},
+          "| plan survived:", out.plan_survived)
+    # A delta goes COLD (ordinary re-plan/rebuild on next use — still
+    # correct, just not incremental) when it leaves the local regime:
+    # nnz or row-width drift beyond the hysteresis band, a mask pad-width
+    # or lane-count change that needs a different compiled shape, or a
+    # structural change to B (its values regather; its pattern is pinned).
+    # `benchmarks/bench_incremental.py` measures the payoff — readiness
+    # after a small delta beats recompute-from-scratch by >= 5x
+    # (`results/bench/incremental_grid.json`, `_incremental_wins`).
+    #
+    # For long-running serving, `RotatingTraceSink` streams the capture
+    # of section 9 to size-capped JSONL segments (logrotate-style, with
+    # an optional seeded sample_rate) — each segment replays standalone:
+    #     sink = RotatingTraceSink("trace.jsonl", max_bytes=1 << 20)
+    #     rec = TraceRecorder(engine, sink=sink, keep_events=False)
+
 
 if __name__ == "__main__":
     main()

@@ -45,7 +45,8 @@ JIT_FUNCS = {"jax.jit", "jit", "pjit", "jax.pjit"}
 #: functions whose return value keys caches by structure (taint sources
 #: for the plan-cache-key rule); the table extends this with discovered
 #: key-builder functions
-STRUCTURE_TAINT_FUNCS = {"structure_signature", "content_fingerprint"}
+STRUCTURE_TAINT_FUNCS = {"structure_signature", "content_fingerprint",
+                         "incremental_signature"}
 
 _CACHE_NAME_RE = re.compile(r"cache|memo|program", re.IGNORECASE)
 

@@ -161,6 +161,12 @@ class LRUCache:
             while len(self._data) > self._capacity:
                 self._data.popitem(last=False)
 
+    def pop(self, key, default=None):
+        """Remove and return one entry (scoped invalidation: evicting a
+        stale key must not flush the rest of the cache)."""
+        with self._lock:
+            return self._data.pop(key, default)
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

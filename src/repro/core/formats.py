@@ -19,6 +19,7 @@ assumes sorted inputs for MCA and Heap).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -110,6 +111,213 @@ def csr_from_coo(rows, cols, vals, shape, sum_dups: bool = True) -> CSR:
 def csr_from_dense(a: np.ndarray) -> CSR:
     rows, cols = np.nonzero(a)
     return csr_from_coo(rows, cols, a[rows, cols], a.shape, sum_dups=False)
+
+
+# --------------------------------------------------------------------------
+# Edge-batch deltas: incremental CSR updates for dynamic graphs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRDelta:
+    """A batch of edge mutations against one CSR operand.
+
+    Records are applied in order (last write to a coordinate wins):
+    ``delete[e]`` removes ``(rows[e], cols[e])`` if present (``vals[e]`` is
+    ignored), otherwise the record upserts — overwriting an existing entry's
+    value or inserting a new structural nonzero.
+    """
+
+    rows: np.ndarray      # (e,) int64
+    cols: np.ndarray      # (e,) int64
+    vals: np.ndarray      # (e,) value per record (ignored for deletes)
+    delete: np.ndarray    # (e,) bool
+
+    def __post_init__(self):
+        object.__setattr__(self, "rows", np.asarray(self.rows, np.int64))
+        object.__setattr__(self, "cols", np.asarray(self.cols, np.int64))
+        object.__setattr__(self, "vals", np.asarray(self.vals))
+        object.__setattr__(self, "delete", np.asarray(self.delete, bool))
+        n = len(self.rows)
+        if not (len(self.cols) == len(self.vals) == len(self.delete) == n):
+            raise ValueError("CSRDelta fields must have equal length")
+
+    @classmethod
+    def upserts(cls, rows, cols, vals) -> "CSRDelta":
+        rows = np.asarray(rows, np.int64)
+        return cls(rows, cols, vals, np.zeros(len(rows), bool))
+
+    @classmethod
+    def deletes(cls, rows, cols) -> "CSRDelta":
+        rows = np.asarray(rows, np.int64)
+        return cls(rows, cols, np.zeros(len(rows), np.float32),
+                   np.ones(len(rows), bool))
+
+    @classmethod
+    def concat(cls, deltas: Sequence["CSRDelta"]) -> "CSRDelta":
+        return cls(np.concatenate([d.rows for d in deltas]),
+                   np.concatenate([d.cols for d in deltas]),
+                   np.concatenate([d.vals for d in deltas]),
+                   np.concatenate([d.delete for d in deltas]))
+
+    @property
+    def changed_rows(self) -> np.ndarray:
+        return np.unique(self.rows)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaResult:
+    """Outcome of ``apply_csr_delta``: the post-delta CSR, which rows
+    changed, whether the sparsity structure survived (values-only delta),
+    and the incrementally-maintained delta signature."""
+
+    csr: CSR
+    changed_rows: np.ndarray   # sorted unique rows any record touched
+    values_only: bool          # True iff no row's column set changed
+    signature: tuple           # incremental_signature(csr), updated in O(Δ)
+
+
+_ISIG_MASK = (1 << 64) - 1
+
+
+def _row_sig(i: int, cols: np.ndarray) -> int:
+    """Salted 64-bit hash of one row's column set (order-insensitive XOR
+    combination across rows stays collision-resistant because the row index
+    salts the CRC and a splitmix finalizer spreads it to 64 bits)."""
+    crc = zlib.crc32(np.ascontiguousarray(cols, dtype=np.int64).tobytes(),
+                     zlib.crc32(np.int64(i).tobytes()))
+    z = (crc + 0x9E3779B97F4A7C15) & _ISIG_MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _ISIG_MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _ISIG_MASK
+    return (z ^ (z >> 31)) & _ISIG_MASK
+
+
+def incremental_signature(x: CSR) -> tuple:
+    """Delta-maintainable structural identity: XOR of salted per-row hashes.
+
+    Unlike ``planner.structure_signature`` (a whole-array CRC that any
+    change recomputes from scratch), this form updates in O(changed rows):
+    ``new = old ^ H(old changed rows) ^ H(new changed rows)``.  Equal
+    signatures => equal sparsity structure (up to hash collision).
+    """
+    acc = 0
+    for i in range(x.shape[0]):
+        s, e = x.indptr[i], x.indptr[i + 1]
+        acc ^= _row_sig(i, x.indices[s:e])
+    return ("icsr", x.shape, x.nnz, acc)
+
+
+def apply_csr_delta(a: CSR, delta: CSRDelta,
+                    old_signature: Optional[tuple] = None) -> DeltaResult:
+    """Apply an edge batch functionally: a new CSR sharing the unchanged
+    rows' entries, the changed-row set, and the delta signature updated
+    incrementally from ``old_signature`` (recomputed when absent).
+    """
+    m, n = a.shape
+    if len(delta) and (delta.rows.min() < 0 or delta.rows.max() >= m
+                       or delta.cols.min() < 0 or delta.cols.max() >= n):
+        raise ValueError(f"delta coordinates outside shape {a.shape}")
+    changed = delta.changed_rows
+    if old_signature is not None and old_signature[:2] != ("icsr", a.shape):
+        raise ValueError("old_signature does not match the operand")
+
+    # per changed row: fold the record stream into the existing entries
+    new_rows_cols: dict = {}
+    new_rows_vals: dict = {}
+    values_only = True
+    for r in changed:
+        cols0, vals0 = a.row(int(r))
+        entries = dict(zip(cols0.tolist(), vals0.tolist()))
+        sel = delta.rows == r
+        for c, v, dele in zip(delta.cols[sel].tolist(),
+                              delta.vals[sel].tolist(),
+                              delta.delete[sel].tolist()):
+            if dele:
+                entries.pop(c, None)
+            else:
+                entries[c] = v
+        cols1 = np.fromiter(sorted(entries), dtype=np.int64,
+                            count=len(entries))
+        new_rows_cols[int(r)] = cols1
+        new_rows_vals[int(r)] = np.array([entries[c] for c in cols1],
+                                         dtype=a.data.dtype)
+        if values_only and not np.array_equal(cols0, cols1):
+            values_only = False
+
+    er = _expand_rows(a.indptr)
+    keep = ~np.isin(er, changed)
+    all_rows = np.concatenate(
+        [er[keep]] + [np.full(len(new_rows_cols[int(r)]), r, np.int64)
+                      for r in changed])
+    all_cols = np.concatenate(
+        [a.indices[keep]] + [new_rows_cols[int(r)] for r in changed])
+    all_vals = np.concatenate(
+        [a.data[keep]] + [new_rows_vals[int(r)] for r in changed])
+    out = csr_from_coo(all_rows, all_cols, all_vals, a.shape, sum_dups=False)
+    out.data = out.data.astype(a.data.dtype, copy=False)
+
+    if old_signature is not None:
+        acc = old_signature[3]
+        for r in changed:
+            acc ^= _row_sig(int(r), a.row(int(r))[0])
+            acc ^= _row_sig(int(r), new_rows_cols[int(r)])
+        sig = ("icsr", a.shape, out.nnz, acc)
+    else:
+        sig = incremental_signature(out)
+    return DeltaResult(csr=out, changed_rows=changed,
+                       values_only=values_only, signature=sig)
+
+
+def bcsr_apply_delta(b: BCSR, new: CSR, changed_rows: np.ndarray) -> BCSR:
+    """Update a BCSR mirror of ``new`` after a delta touching
+    ``changed_rows``: only the affected block rows' occupancy and blocks
+    are rebuilt; every other block row's device blocks are reused.
+    """
+    bs = b.block_size
+    if (b.shape != new.shape):
+        raise ValueError("BCSR/CSR shape mismatch")
+    changed_rows = np.asarray(changed_rows, np.int64)
+    if len(changed_rows) == 0:
+        return b
+    affected = set(np.unique(changed_rows // bs).tolist())
+    mb = b.block_rows
+
+    seg_indices = []   # per block row: occupied block-col indices
+    seg_blocks = []    # per block row: host or device (nnzb_i, bs, bs)
+    host_blocks = isinstance(b.blocks, np.ndarray)
+    for br in range(mb):
+        if br not in affected:
+            s, e = int(b.indptr[br]), int(b.indptr[br + 1])
+            seg_indices.append(b.indices[s:e])
+            seg_blocks.append(b.blocks[s:e])
+            continue
+        lo, hi = br * bs, min((br + 1) * bs, new.shape[0])
+        s, e = int(new.indptr[lo]), int(new.indptr[hi])
+        rows = _expand_rows(new.indptr)[s:e] - lo
+        cols = new.indices[s:e]
+        vals = new.data[s:e]
+        bcols = np.unique(cols // bs) if len(cols) else \
+            np.zeros(0, np.int64)
+        blocks = np.zeros((len(bcols), bs, bs),
+                          dtype=np.asarray(vals).dtype)
+        if len(cols):
+            pos = np.searchsorted(bcols, cols // bs)
+            blocks[pos, rows, cols % bs] = vals
+        seg_indices.append(bcols)
+        seg_blocks.append(blocks if host_blocks else jnp.asarray(blocks))
+
+    counts = np.array([len(ix) for ix in seg_indices], np.int64)
+    indptr = np.zeros(mb + 1, np.int64)
+    indptr[1:] = np.cumsum(counts)
+    indices = (np.concatenate(seg_indices) if counts.sum()
+               else np.zeros(0, np.int64))
+    xp = np if isinstance(b.blocks, np.ndarray) else jnp
+    nonempty = [blk for blk in seg_blocks if blk.shape[0]]
+    blocks = xp.concatenate(nonempty) if nonempty else b.blocks[:0]
+    return BCSR(indptr, indices.astype(np.int64), blocks, b.shape, bs)
 
 
 # --------------------------------------------------------------------------

@@ -4,24 +4,32 @@
 stream: structure-bucketed batching (one cached plan + one compiled
 program per bucket), sync and async-future submission with bounded-queue
 backpressure, a content-keyed bounded result cache, and per-bucket
-metrics.  See ``examples/quickstart.py`` §8 and
-``benchmarks/bench_serve.py`` for the measured batching regimes.
+metrics.  ``QueryEngine.submit_delta`` folds edge-delta batches into the
+served operands incrementally: plan revalidation, compiled-program lane
+patching, and row-scoped result-cache invalidation instead of a cold
+restart (``examples/quickstart.py`` §11, ``benchmarks/bench_incremental``).
+See ``examples/quickstart.py`` §8 and ``benchmarks/bench_serve.py`` for
+the measured batching regimes.
 """
 from .batcher import Batcher, Request, bucket_key, merge_planned
-from .burst import BurstProgram, burst_eligible, get_program
+from .burst import (BurstProgram, burst_eligible, get_program,
+                    patch_program, peek_program, record_lineage)
 from .cache import (ResultCache, content_fingerprint, result_key,
-                    value_fingerprint)
+                    row_bitmap, value_fingerprint)
 from .clock import SystemClock, VirtualClock
-from .engine import QueryEngine, Ticket
+from .engine import DeltaOutcome, QueryEngine, Ticket
 from .metrics import ServeMetrics
-from .trace import (ReplayReport, Trace, TraceError, TraceRecorder,
-                    golden_trace_path, replay_trace, synthesize_trace)
+from .trace import (ReplayReport, RotatingTraceSink, Trace, TraceError,
+                    TraceRecorder, golden_trace_path, load_rotated,
+                    replay_trace, synthesize_trace)
 
 __all__ = [
-    "Batcher", "BurstProgram", "QueryEngine", "ReplayReport", "Request",
-    "ResultCache", "ServeMetrics", "SystemClock", "Ticket", "Trace",
-    "TraceError", "TraceRecorder", "VirtualClock", "bucket_key",
-    "burst_eligible", "content_fingerprint", "get_program",
-    "golden_trace_path", "merge_planned", "replay_trace", "result_key",
+    "Batcher", "BurstProgram", "DeltaOutcome", "QueryEngine",
+    "ReplayReport", "Request", "ResultCache", "RotatingTraceSink",
+    "ServeMetrics", "SystemClock", "Ticket", "Trace", "TraceError",
+    "TraceRecorder", "VirtualClock", "bucket_key", "burst_eligible",
+    "content_fingerprint", "get_program", "golden_trace_path",
+    "load_rotated", "merge_planned", "patch_program", "peek_program",
+    "record_lineage", "replay_trace", "result_key", "row_bitmap",
     "synthesize_trace", "value_fingerprint",
 ]

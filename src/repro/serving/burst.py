@@ -26,8 +26,20 @@ orders and stay on the batched row driver.
 
 ``present`` is pure structure (a slot is present iff >= 1 structural
 product hits it) and is computed once per program, shared by every query.
+
+Delta lifecycle: the lane tables (IA/BV/present) are jit ARGUMENTS, not
+closure constants, and the jitted fold is memoized per (m, pm, n_lanes,
+semiring) shape class — so a program whose lanes were PATCHED after an
+edge delta (``BurstProgram.patched``) reuses the existing compiled
+executable instead of re-tracing.  A row-local delta (A and/or M rows
+changed, B content equal) re-emits only the changed rows' lane columns;
+because products stay globally ordered by (slot, ascending k) and the
+fori_loop carry is unchanged, a patched program's results are bitwise the
+cold rebuild's.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -54,6 +66,60 @@ MAX_TOTAL_PRODUCTS = 1 << 22
 _programs = caches.LRUCache("serve-burst-programs", 64,
                             env_var="REPRO_BURST_PROG_CAP")
 
+#: lane-PATCHED programs (delta path), same key shape as ``_programs`` but
+#: separately capped so a churning delta stream cannot evict the cold-built
+#: programs of stable structures; $REPRO_LANE_PATCH_CAP overrides
+_patches = caches.LRUCache("serve-lane-patches", 32,
+                           env_var="REPRO_LANE_PATCH_CAP")
+
+#: jitted lane folds memoized per (m, pm, n_lanes, semiring) shape class —
+#: shared between a program and its patched descendants, which is what
+#: makes a patch compile-free; $REPRO_BURST_FN_CAP overrides
+_fns = caches.LRUCache("serve-burst-fns", 32, env_var="REPRO_BURST_FN_CAP")
+
+#: delta lineage: post-delta program key -> (parent program, changed rows),
+#: recorded by the engine's ``submit_delta``; lets ``get_program`` re-derive
+#: an evicted patched program from its parent instead of compiling cold;
+#: $REPRO_DELTA_LINEAGE_CAP overrides the capacity
+_lineage = caches.LRUCache("serve-delta-lineage", 16,
+                           env_var="REPRO_DELTA_LINEAGE_CAP")
+
+
+def _padded_nnz(nnz: int) -> int:
+    """Quantized value-vector length (power-of-two bucket >= nnz + 1).
+
+    ``BurstProgram.run`` zero-pads every query's value stack to this
+    length, which keeps the jitted fold's input shape stable while an
+    incremental delta stream drifts A's nnz — only crossing a bucket
+    boundary re-traces.  The +1 reserves the pad-lane sentinel slot
+    (``IA`` points pad lanes at index ``nnz``, which must read 0.0)."""
+    return max(256, 1 << (nnz + 1 - 1).bit_length())
+
+
+def _lane_fn(m: int, pm: int, n_lanes: int, semiring: Semiring):
+    """The compiled fold, parameterized by lane tables: patched programs
+    pass different IA/BV/present ARRAYS through the same jitted callable,
+    so equal shapes never re-trace."""
+    key = (m, pm, n_lanes, semiring.name)
+    fn = _fns.get(key)  # lint: plan-key-ok(shape-pure jit memo)
+    if fn is not None:
+        return fn
+    zero = semiring.zero
+    mul, add = semiring.mul, semiring.add
+
+    def one(av, ia, bv, pres):       # av: zero-padded beyond the real nnz
+        def lane(l, acc):
+            return add(acc, mul(av[ia[l]], bv[l]))
+
+        acc = jax.lax.fori_loop(
+            0, n_lanes, lane, jnp.full((m * pm,), zero, jnp.float32))
+        acc = acc.reshape(m, pm)
+        return jnp.where(pres, acc, jnp.asarray(zero, acc.dtype))
+
+    fn = jax.jit(jax.vmap(one, in_axes=(0, None, None, None)))
+    _fns.put(key, fn)  # lint: plan-key-ok(shape-pure jit memo)
+    return fn
+
 
 def _row_sort_perm(x: CSR) -> np.ndarray:
     """Permutation mapping ``x.sorted_rows()`` entry order back to ``x.data``
@@ -62,119 +128,321 @@ def _row_sort_perm(x: CSR) -> np.ndarray:
     return np.lexsort((x.indices, rows))
 
 
+def _expand_products(a_rows: np.ndarray, a_cols: np.ndarray,
+                     a_pos: np.ndarray, B_s: CSR, M_s: CSR,
+                     pm: int, n: int
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Gustavson expansion of the given A entries restricted to the mask.
+
+    Returns ``(slot, a_gather, b_gather)`` sorted by (slot, ascending k):
+    one product per (A entry at (r, k)) x (B entry at (k, c)) with (r, c)
+    in M.  ``a_gather`` indexes A's data order (via ``a_pos``), ``b_gather``
+    indexes ``B_s.data``.  The (slot, k) sort is THE bitwise contract: it
+    is order-stable under row-local restriction, which is what lets a
+    patch splice per-row lane columns without perturbing any other slot's
+    fold sequence.
+    """
+    b_cnt = np.diff(B_s.indptr)[a_cols]
+    ge_a = np.repeat(np.arange(len(a_cols)), b_cnt)       # index into entries
+    ge_b = (np.repeat(B_s.indptr[a_cols], b_cnt)
+            + (np.arange(b_cnt.sum()) - np.repeat(
+                np.cumsum(b_cnt) - b_cnt, b_cnt)))        # index into B_s
+    pr = a_rows[ge_a]                                     # product row
+    pk = a_cols[ge_a]                                     # contraction index
+    pc = B_s.indices[ge_b]                                # product col
+    # mask membership -> slot (position within the sorted mask row),
+    # via one searchsorted over the globally sorted (row, col) keys
+    mkey = (_expand_rows(M_s.indptr).astype(np.int64) * (n + 1)
+            + M_s.indices)
+    q = pr.astype(np.int64) * (n + 1) + pc
+    pos = np.searchsorted(mkey, q)
+    posc = np.minimum(pos, max(len(mkey) - 1, 0))
+    hit = (mkey[posc] == q) if len(mkey) else np.zeros(len(q), bool)
+    keep = np.nonzero(hit)[0]
+    slot = (pr[keep] * pm
+            + (posc[keep] - M_s.indptr[pr[keep]])).astype(np.int64)
+    kk = pk[keep]
+    order = np.lexsort((kk, slot))                        # ascending k / slot
+    return slot[order], a_pos[ge_a[keep][order]], ge_b[keep][order]
+
+
+def _lane_tables(slot: np.ndarray, a_gather: np.ndarray,
+                 b_gather: np.ndarray, b_data: np.ndarray, nslots: int,
+                 n_lanes: Optional[int], nnz_a: int, zero: float
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(IA, BV, BG, counts) lane tables, laid out (n_lanes, nslots).
+
+    IA[l] indexes the query's value vector (sentinel -> the appended 0.0),
+    BV[l] holds B's values (pad lanes carry ``zero``, the fold identity),
+    BG[l] the position in sorted-B data each BV came from (-1 for pads —
+    the B-values patch regathers through it).  ``n_lanes=None`` sizes the
+    tables to the longest chain; a patch passes the parent's lane count so
+    the spliced columns keep the compiled fold's static shape.
+    """
+    F = len(slot)
+    counts = np.zeros(nslots + 1, np.int64)
+    np.add.at(counts, slot + 1, 1)
+    starts = np.cumsum(counts)[:-1]
+    L = int(counts[1:].max(initial=0))
+    if n_lanes is None:
+        n_lanes = max(L, 1)
+    elif L > n_lanes:
+        raise _TooLarge()
+    P = np.full((nslots, n_lanes), F, np.int64)
+    lane = np.arange(F) - starts[slot]
+    P[slot, lane] = np.arange(F)
+    sel = np.minimum(P, F)
+    IA = np.concatenate([a_gather.astype(np.int32),
+                         np.full((1,), nnz_a, np.int32)])[sel].T.copy()
+    BV = np.concatenate([b_data[b_gather].astype(np.float32),
+                         np.full((1,), zero, np.float32)])[sel].T.copy()
+    BG = np.concatenate([b_gather.astype(np.int64),
+                         np.full((1,), -1, np.int64)])[sel].T.copy()
+    return IA, BV, BG, counts[1:]
+
+
 class BurstProgram:
     """One compiled structure: executes any batch of value-vectors for A."""
 
     def __init__(self, A: CSR, B: CSR, M: CSR, semiring: Semiring,
                  wm: int = None):
+        from .cache import content_fingerprint  # deferred: no import cycle
         m, k = A.shape
         _, n = B.shape
         self.shape = (m, n)
+        self.k = k
         self.nnz_a = A.nnz
         self.semiring = semiring
+        self.wm = wm
+        # delta-patch identity of the operands the lanes were built from
+        self._a_indptr = A.indptr.copy()
+        self._m_indptr = M.indptr.copy()
+        self._b_sig = structure_signature(B)
+        self._b_fp = content_fingerprint(B)
 
         a_perm = _row_sort_perm(A)          # kernels see sorted rows
+        self._a_inv = np.empty(A.nnz, np.int64)
+        self._a_inv[a_perm] = np.arange(A.nnz)
         a_rows = _expand_rows(A.indptr)[a_perm]
         a_cols = A.indices[a_perm]
 
         M_s = M.sorted_rows()
         M_p = padded_from_csr(M, wm)
         self.pm = pm = M_p.width
+        self._mask_cols_host = np.asarray(M_p.cols)
         self.mask_cols = M_p.cols
 
-        # Gustavson expansion restricted to the mask: one product per
-        # (A entry e at (r, k)) x (B entry f at (k, c)) with (r, c) in M
-        B_s = B.sorted_rows()
-        b_cnt = np.diff(B_s.indptr)[a_cols]
-        ge_a = np.repeat(np.arange(len(a_cols)), b_cnt)   # index into perm'd A
-        ge_b = (np.repeat(B_s.indptr[a_cols], b_cnt)
-                + (np.arange(b_cnt.sum()) - np.repeat(
-                    np.cumsum(b_cnt) - b_cnt, b_cnt)))    # index into B_s
-        pr = a_rows[ge_a]                                 # product row
-        pk = a_cols[ge_a]                                 # contraction index
-        pc = B_s.indices[ge_b]                            # product col
-        # mask membership -> slot (position within the sorted mask row),
-        # via one searchsorted over the globally sorted (row, col) keys
-        mkey = (_expand_rows(M_s.indptr).astype(np.int64) * (n + 1)
-                + M_s.indices)
-        q = pr.astype(np.int64) * (n + 1) + pc
-        pos = np.searchsorted(mkey, q)
-        posc = np.minimum(pos, max(len(mkey) - 1, 0))
-        hit = (len(mkey) > 0) & (mkey[posc] == q)
-        keep = np.nonzero(hit)[0]
-        if len(keep) > MAX_TOTAL_PRODUCTS:
+        # B's structure is pinned for the program's lifetime (patches check
+        # the signature): remember the row-sort permutation so a patch can
+        # take B's sorted view as an O(nnz) gather instead of a lexsort
+        self._b_perm = _row_sort_perm(B)
+        self._b_sorted_idx = B.indices[self._b_perm]
+        B_s = CSR(B.indptr, self._b_sorted_idx,
+                  B.data[self._b_perm], B.shape)
+        slot, a_gather, b_gather = _expand_products(
+            a_rows, a_cols, a_perm, B_s, M_s, pm, n)
+        if len(slot) > MAX_TOTAL_PRODUCTS:
             raise _TooLarge()
-        slot = (pr[keep] * pm
-                + (posc[keep] - M_s.indptr[pr[keep]])).astype(np.int64)
-        kk = pk[keep]
-        order = np.lexsort((kk, slot))                    # ascending k / slot
-        slot = slot[order]
-        self._a_gather = np.asarray(a_perm[ge_a[keep][order]], np.int32)
-        b_vals = B_s.data[ge_b[keep][order]].astype(np.float32)
-
-        # per-slot padded product lists: P[s, l] -> product lane (sentinel F
-        # selects the sr.zero pad, the fold identity)
-        F = len(slot)
-        counts = np.zeros(m * pm + 1, np.int64)
-        np.add.at(counts, slot + 1, 1)
-        starts = np.cumsum(counts)[:-1]
-        L = int(counts.max(initial=0))
-        if L > MAX_PRODUCTS_PER_SLOT:
+        counts_probe = np.bincount(slot, minlength=1)
+        if int(counts_probe.max(initial=0)) > MAX_PRODUCTS_PER_SLOT:
             raise _TooLarge()
-        self.max_chain = L
-        self.n_products = F
-        P = np.full((m * pm, max(L, 1)), F, np.int64)
-        lane = np.arange(F) - starts[slot]
-        P[slot, lane] = np.arange(F)
-        present = (counts[1:].reshape(m, pm) > 0)
-        present &= np.asarray(M_p.cols) < n               # pad slots absent
-        self.present = jnp.asarray(present)
+        self.n_products = len(slot)
 
-        zero = semiring.zero
-        # per-lane gathers, laid out (L, S): IA[l] indexes the query's value
-        # vector (sentinel -> the appended 0.0), BV[l] holds B's values (pad
-        # lanes carry sr.zero, the fold identity for every registered
-        # semiring on its value domain).  The fold MUST be a
-        # ``lax.fori_loop`` with the accumulator as loop carry: the
-        # loop-carried dependency pins the evaluation order (XLA reassocia-
-        # tes an unrolled chain), and each trip's ``add(acc, mul(a, b))``
-        # is the same expression the row kernels' insert_row folds, so XLA
-        # contracts both the same way (a sequential FMA chain on CPU) —
-        # that is what makes the replay bitwise-equal to msa/hash/mca, and
-        # the property tests pin it per backend.
-        IA = np.concatenate([self._a_gather,
-                             np.full((1,), A.nnz, np.int32)])[
-            np.minimum(P, F)].astype(np.int32).T.copy()
-        BV = np.concatenate([b_vals, np.full((1,), zero, np.float32)])[
-            np.minimum(P, F)].T.copy()
-        IAj = jnp.asarray(IA)
-        BVj = jnp.asarray(BV)
-        pres = self.present
-        mul, add = semiring.mul, semiring.add
-        n_lanes = IA.shape[0]
+        IA, BV, BG, counts = _lane_tables(
+            slot, a_gather, b_gather, B_s.data, m * pm, None, A.nnz,
+            semiring.zero)
+        self.max_chain = IA.shape[0] if self.n_products else 0
+        present = (counts.reshape(m, pm) > 0)
+        present &= self._mask_cols_host < n               # pad slots absent
+        self._finish(IA, BV, BG, present)
 
-        def one(av):                                      # av: (nnz_a,)
-            av = jnp.concatenate([av, jnp.zeros((1,), av.dtype)])
-
-            def lane(l, acc):
-                return add(acc, mul(av[IAj[l]], BVj[l]))
-
-            acc = jax.lax.fori_loop(
-                0, n_lanes, lane, jnp.full((m * pm,), zero, jnp.float32))
-            acc = acc.reshape(m, pm)
-            return jnp.where(pres, acc, jnp.asarray(zero, acc.dtype))
-
-        self._fn = jax.jit(jax.vmap(one))
+    def _finish(self, IA, BV, BG, present_host) -> None:
+        """Install lane tables (host + device) and bind the shared fold."""
+        m, _ = self.shape
+        self._IA, self._BV, self._BG = IA, BV, BG
+        self._present_host = present_host
+        self.present = jnp.asarray(present_host)
+        self._IAj = jnp.asarray(IA)
+        self._BVj = jnp.asarray(BV)
+        self._fn = _lane_fn(m, self.pm, IA.shape[0], self.semiring)
 
     def run(self, As) -> list:
-        """Serve a batch of same-structure A's: one device dispatch."""
-        stack = jnp.asarray(np.stack([a.data.astype(np.float32)
-                                      for a in As]))
-        vals = self._fn(stack)
+        """Serve a batch of same-structure A's: one device dispatch.
+
+        The value stack is zero-padded to a power-of-two bucket so the
+        jitted fold's input shape survives small nnz drifts: a structural
+        delta that grows A by a few entries re-uses the compiled
+        executable instead of re-tracing.  IA never indexes past
+        ``nnz_a`` (the sentinel points AT it), and the sentinel keeps
+        landing on a zero, so padding cannot change any fold value.
+        """
+        q = _padded_nnz(self.nnz_a)
+        stack = np.zeros((len(As), q), np.float32)
+        for i, a in enumerate(As):
+            stack[i, :self.nnz_a] = a.data
+        vals = self._fn(jnp.asarray(stack), self._IAj, self._BVj,
+                        self.present)
         vals.block_until_ready()
         return [MaskedSpGEMMResult(vals[i], self.present, self.mask_cols,
                                    self.shape)
                 for i in range(len(As))]
+
+    # -- delta lifecycle ---------------------------------------------------
+
+    def patched(self, A: CSR, B: CSR, M: CSR,
+                changed_rows: np.ndarray
+                ) -> Optional[Tuple["BurstProgram", int]]:
+        """Row-local lane patch: ``(program, lane columns re-emitted)``.
+
+        Valid when A's and M's changes are confined to ``changed_rows`` and
+        B's STRUCTURE is this program's (B values may differ — they regather
+        through the stored ``BG`` lanes).  Only the changed rows' slot
+        columns are re-expanded; every other column of IA/BV (and the
+        per-slot ascending-k fold sequences they encode) is byte-identical
+        to this program's, which keeps a patched run bitwise-equal to a
+        cold rebuild.  The work here is O(changed rows) plus table
+        memcpys: B's sorted view is a stored-permutation gather, the mask
+        is only re-sorted/re-padded over the changed rows, and the
+        untouched rows' padded columns splice from the parent.  Returns
+        ``None`` when the delta needs a different static shape (mask pad
+        width or lane count grew, B structure changed) — the caller falls
+        back to ``get_program``.
+        """
+        from .cache import content_fingerprint  # deferred: no import cycle
+        m, n = self.shape
+        if A.shape != (m, self.k) or B.shape != (self.k, n) \
+                or M.shape != (m, n):
+            return None
+        if structure_signature(B) != self._b_sig:
+            return None
+        m_nnz = np.diff(M.indptr)
+        w_max = int(m_nnz.max(initial=0))
+        w = self.wm if self.wm is not None else max(1, w_max)
+        if w != self.pm or w_max > self.pm:
+            return None
+        changed_rows = np.unique(np.asarray(changed_rows, np.int64))
+        # unchanged rows must really be unchanged in A and M (the IA remap
+        # and the mask-column splice below rely on their entry counts)
+        unchanged = np.ones(m, bool)
+        unchanged[changed_rows] = False
+        if not np.array_equal(np.diff(self._a_indptr)[unchanged],
+                              np.diff(A.indptr)[unchanged]):
+            return None
+        if not np.array_equal(np.diff(self._m_indptr)[unchanged],
+                              m_nnz[unchanged]):
+            return None
+
+        zero = self.semiring.zero
+        B_s = CSR(B.indptr, self._b_sorted_idx,
+                  B.data[self._b_perm], B.shape)
+        b_fp = content_fingerprint(B)
+        if b_fp != self._b_fp:
+            # B values drifted (same structure): regather every BV lane
+            # through BG; pads (-1) keep the fold identity
+            BV = np.where(self._BG >= 0,
+                          np.concatenate([B_s.data.astype(np.float32),
+                                          [np.float32(zero)]])[self._BG],
+                          np.float32(zero))
+        else:
+            BV = self._BV.copy()
+
+        # IA remap: unchanged rows' A-entry positions shift by the changed
+        # rows' nnz drift.  Old IA entries are SORTED-ORDER positions of the
+        # old A mapped back through a_perm; rank-within-row is preserved, so
+        # new position = old sorted rank + (new indptr - old indptr)[row]
+        old_nnz = self.nnz_a
+        rows_old = _expand_rows(self._a_indptr)
+        shift = (A.indptr[:-1] - self._a_indptr[:-1])
+        posmap = np.empty(old_nnz + 1, np.int64)
+        posmap[:old_nnz] = self._a_inv + shift[rows_old]
+        posmap[old_nnz] = A.nnz
+        IA = posmap[self._IA].astype(np.int32)
+        BG = self._BG.copy()
+
+        # re-expand ONLY the changed rows' products
+        a_perm = _row_sort_perm(A)
+        a_rows_all = _expand_rows(A.indptr)
+        sel = np.concatenate(
+            [np.arange(A.indptr[r], A.indptr[r + 1]) for r in changed_rows]
+        ).astype(np.int64) if len(changed_rows) else np.zeros(0, np.int64)
+        # A may arrive row-unsorted like any CSR; take its sorted view of
+        # the changed rows (positions in data order via the perm)
+        inv = np.empty(A.nnz, np.int64)
+        inv[a_perm] = np.arange(A.nnz)
+        sub_pos = a_perm[sel]                 # data positions, sorted order
+        sub_rows = a_rows_all[a_perm][sel]
+        sub_cols = A.indices[a_perm][sel]
+        pm = self.pm
+        # sorted view of ONLY the changed rows of M, with global row ids:
+        # the expansion queries no other rows, and within-row offsets (the
+        # slot layout) are unaffected by dropping the untouched rows
+        mcnt = m_nnz[changed_rows]
+        msel = np.concatenate(
+            [np.arange(M.indptr[r], M.indptr[r + 1]) for r in changed_rows]
+        ).astype(np.int64) if len(changed_rows) else np.zeros(0, np.int64)
+        mrows = np.repeat(changed_rows, mcnt)
+        mcols = M.indices[msel][np.lexsort((M.indices[msel], mrows))]
+        sub_indptr = np.zeros(m + 1, np.int64)
+        sub_indptr[changed_rows + 1] = mcnt
+        M_s = CSR(np.cumsum(sub_indptr), mcols,
+                  np.zeros(len(mcols)), (m, n))
+        try:
+            slot, a_gather, b_gather = _expand_products(
+                sub_rows, sub_cols, sub_pos, B_s, M_s, pm, n)
+            # local slot index within the changed rows' column block
+            rloc = np.searchsorted(changed_rows, slot // pm)
+            lslot = rloc * pm + slot % pm
+            IA_s, BV_s, BG_s, counts = _lane_tables(
+                lslot, a_gather, b_gather, B_s.data,
+                len(changed_rows) * pm, self._IA.shape[0], A.nnz, zero)
+        except _TooLarge:
+            return None
+
+        cols = (changed_rows[:, None] * pm
+                + np.arange(pm)[None, :]).ravel()
+        IA[:, cols] = IA_s
+        BV[:, cols] = BV_s
+        BG[:, cols] = BG_s
+        # padded mask columns of the changed rows, laid out exactly as
+        # padded_from_csr would (within-row sorted, pad value == n)
+        ch_cols = np.full((len(changed_rows), pm), n, np.int32)
+        if len(mcols):
+            starts = np.cumsum(mcnt) - mcnt
+            ch_cols[np.repeat(np.arange(len(changed_rows)), mcnt),
+                    np.arange(len(mcols)) - np.repeat(starts, mcnt)] = mcols
+        if np.array_equal(ch_cols, self._mask_cols_host[changed_rows]):
+            # mask layout untouched (A-only or values-only-M delta): the
+            # parent's host/device column tables are reusable as-is
+            mask_cols_host, mask_cols_dev = self._mask_cols_host, \
+                self.mask_cols
+        else:
+            mask_cols_host = self._mask_cols_host.copy()
+            mask_cols_host[changed_rows] = ch_cols
+            mask_cols_dev = jnp.asarray(mask_cols_host)
+        present = self._present_host.copy()
+        present[changed_rows] = (counts.reshape(len(changed_rows), pm) > 0) \
+            & (ch_cols < n)
+
+        clone = object.__new__(BurstProgram)
+        clone.shape = self.shape
+        clone.k = self.k
+        clone.nnz_a = A.nnz
+        clone.semiring = self.semiring
+        clone.wm = self.wm
+        clone.pm = pm
+        clone._mask_cols_host = mask_cols_host
+        clone.mask_cols = mask_cols_dev
+        clone.n_products = int((IA != A.nnz).sum())
+        clone.max_chain = self.max_chain
+        clone._a_indptr = A.indptr.copy()
+        clone._m_indptr = M.indptr.copy()
+        clone._a_inv = inv
+        clone._b_sig = self._b_sig
+        clone._b_fp = b_fp
+        clone._b_perm = self._b_perm
+        clone._b_sorted_idx = self._b_sorted_idx
+        clone._finish(IA, BV, BG, present)
+        return clone, len(cols)
 
 
 class _TooLarge(Exception):
@@ -187,12 +455,38 @@ def burst_eligible(plan_algorithm: str, complement: bool, A, B, M) -> bool:
             and isinstance(M, CSR))
 
 
+def _program_key(A: CSR, B: CSR, M: CSR, semiring: Semiring, wm) -> tuple:
+    from .cache import content_fingerprint
+    return (structure_signature(A), content_fingerprint(B),
+            structure_signature(M), semiring.name, wm)
+
+
+def peek_program(A: CSR, B: CSR, M: CSR, semiring: Semiring, wm):
+    """Cached program for this structure if one exists — no build, no
+    patch.  The delta path uses it to find a pre-delta parent worth
+    patching without ever paying an eager cold compile."""
+    key = _program_key(A, B, M, semiring, wm)
+    hit = _programs.peek(key)  # lint: plan-key-ok(structure-pure program)
+    if hit is not None:
+        return hit if hit is not _OVER_CAP else None
+    return _patches.peek(key)  # lint: plan-key-ok(structure-pure program)
+
+
+def record_lineage(A: CSR, B: CSR, M: CSR, semiring: Semiring, wm,
+                   parent: BurstProgram, changed_rows: np.ndarray) -> None:
+    """Remember that the post-delta structure (A, B, M) descends from
+    ``parent`` with only ``changed_rows`` touched.  If the patched program
+    is later evicted from ``_patches``, ``get_program`` re-derives it from
+    this lineage instead of compiling cold."""
+    key = _program_key(A, B, M, semiring, wm)
+    val = (parent, np.asarray(changed_rows, np.int64))
+    _lineage.put(key, val)  # lint: plan-key-ok(structure-pure program)
+
+
 def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
                 wm: int = None):
     """Cached compile of the bucket's structure (None when over the caps)."""
-    from .cache import content_fingerprint
-    key = (structure_signature(A), content_fingerprint(B),
-           structure_signature(M), semiring.name, wm)
+    key = _program_key(A, B, M, semiring, wm)
     # a BurstProgram replays the gather/scatter pattern of the structure
     # EXACTLY — it encodes no planner election, so it stays valid across
     # calibration-profile changes; deliberately token-free so a retune
@@ -200,6 +494,15 @@ def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
     hit = _programs.get(key)  # lint: plan-key-ok(structure-pure program)
     if hit is not None:
         return hit if hit is not _OVER_CAP else None
+    hit = _patches.get(key)  # lint: plan-key-ok(structure-pure program)
+    if hit is not None:
+        return hit
+    lin = _lineage.get(key)  # lint: plan-key-ok(structure-pure program)
+    if lin is not None:
+        got = lin[0].patched(A, B, M, lin[1])
+        if got is not None:
+            _patches.put(key, got[0])  # lint: plan-key-ok(structure-pure)
+            return got[0]
     try:
         prog = BurstProgram(A, B, M, semiring, wm)
     except _TooLarge:
@@ -207,6 +510,33 @@ def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
         return None
     _programs.put(key, prog)  # lint: plan-key-ok(structure-pure program)
     return prog
+
+
+def patch_program(old: BurstProgram, A: CSR, B: CSR, M: CSR,
+                  semiring: Semiring, wm, changed_rows: np.ndarray
+                  ) -> Tuple[Optional[BurstProgram], int]:
+    """Patch ``old`` onto the post-delta operands: ``(program, lanes)``.
+
+    A memo hit (the same post-delta structure patched before) costs one
+    lookup; a fresh patch re-emits only the changed rows' lane columns and
+    is registered under the post-delta key so subsequent ``get_program``
+    calls for this structure serve it directly.  ``(None, 0)`` means the
+    delta is not row-local at this program's static shape — the caller
+    rebuilds cold via ``get_program``.
+    """
+    key = _program_key(A, B, M, semiring, wm)
+    hit = _patches.get(key)  # lint: plan-key-ok(structure-pure program)
+    if hit is not None:
+        return hit, 0
+    hit = _programs.peek(key)  # lint: plan-key-ok(structure-pure program)
+    if hit is not None and hit is not _OVER_CAP:
+        return hit, 0
+    got = old.patched(A, B, M, changed_rows)
+    if got is None:
+        return None, 0
+    prog, lanes = got
+    _patches.put(key, prog)  # lint: plan-key-ok(structure-pure program)
+    return prog, lanes
 
 
 #: cache sentinel: structure known to exceed the replay caps

@@ -62,6 +62,21 @@ def result_key(A, B, M, *, semiring_name: str, complement: bool,
             mesh_key, cost_token)
 
 
+#: coarseness of the per-entry row coverage recorded at ``put`` time: rows
+#: map onto this many buckets, so ``invalidate(sig, rows=...)`` skips
+#: entries whose recorded coverage provably misses every changed row
+ROW_BITMAP_BUCKETS = 64
+
+
+def row_bitmap(rows, nrows: int) -> int:
+    """Coarse coverage bitmap of a row set (bit ``r * B // nrows``)."""
+    mask = 0
+    n = max(1, int(nrows))
+    for r in np.unique(np.asarray(rows, np.int64)):
+        mask |= 1 << (int(r) * ROW_BITMAP_BUCKETS // n)
+    return mask
+
+
 _instance_count = 0
 _instance_lock = threading.Lock()
 
@@ -90,6 +105,10 @@ class ResultCache:
                         else f"serve-results-{_instance_count}")
         self.name = name
         self._lru = caches.LRUCache(name, cap)
+        # structure sig -> {entry key: row coverage bitmap}: the scoped-
+        # invalidation index (see ``put``/``invalidate``)
+        self._tags: dict = {}
+        self._tags_lock = threading.Lock()
 
     def unregister(self) -> None:
         """Drop this cache from the process registry (it keeps working
@@ -99,11 +118,62 @@ class ResultCache:
     def get(self, key):
         return self._lru.get(key)
 
-    def put(self, key, value) -> None:
+    def put(self, key, value, tags=None) -> None:
+        """Insert; ``tags`` is an optional sequence of ``(structure_sig,
+        row_bitmap)`` pairs naming the operand structures (and the coarse
+        row coverage) the entry depends on — ``invalidate`` walks the tag
+        index instead of the whole cache, so a delta to one structure
+        never touches entries of unrelated structures sharing the engine.
+        """
         self._lru.put(key, value)
+        if tags:
+            with self._tags_lock:
+                for sig, bitmap in tags:
+                    self._tags.setdefault(sig, {})[key] = int(bitmap)
+                self._maybe_prune_locked()
+
+    def invalidate(self, sig, rows_bitmap: Optional[int] = None) -> int:
+        """Evict entries tagged with structure ``sig`` whose recorded row
+        coverage overlaps ``rows_bitmap`` (None = every row).  Returns the
+        number of live entries evicted.  Scoped: entries of other
+        structures — and non-overlapping row ranges — stay cached.
+        """
+        with self._tags_lock:
+            index = self._tags.get(sig)
+            if not index:
+                return 0
+            if rows_bitmap is None:
+                hit = list(index)
+            else:
+                hit = [k for k, b in index.items() if b & rows_bitmap]
+            for k in hit:
+                index.pop(k, None)
+            if not index:
+                self._tags.pop(sig, None)
+        evicted = 0
+        for k in hit:
+            if self._lru.pop(k) is not None:
+                evicted += 1
+        return evicted
+
+    def _maybe_prune_locked(self) -> None:
+        """Drop tag-index records whose entries the LRU already evicted
+        (called under ``_tags_lock``); keeps the index O(capacity)."""
+        total = sum(len(ix) for ix in self._tags.values())
+        if total <= 4 * self._lru.capacity:
+            return
+        for sig in list(self._tags):
+            ix = self._tags[sig]
+            for k in list(ix):
+                if self._lru.peek(k) is None:
+                    del ix[k]
+            if not ix:
+                del self._tags[sig]
 
     def clear(self) -> None:
         self._lru.clear()
+        with self._tags_lock:
+            self._tags.clear()
 
     def __len__(self) -> int:
         return len(self._lru)

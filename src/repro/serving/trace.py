@@ -303,6 +303,133 @@ def golden_trace_path() -> str:
 # ---------------------------------------------------------------------------
 
 
+class RotatingTraceSink:
+    """Streaming JSONL sink for long captures (logrotate discipline).
+
+    Events append to ``path``; when a segment would exceed ``max_bytes``
+    the files shift ``path`` → ``path.1`` → ... → ``path.N`` (``N =
+    rotate``; the oldest segment falls off) and a fresh segment opens.
+    EVERY segment is a standalone loadable trace: it begins with a full
+    schema header that simply omits the request count (a stream cannot
+    know it; ``Trace.loads`` only cross-checks the count when present).
+
+    ``sample_rate`` keeps that fraction of events, decided by a rng
+    seeded with ``seed`` — deterministic per capture, never the wall
+    clock, so two captures of one virtual-clock replay sample the SAME
+    events.  An event larger than ``max_bytes`` on its own still writes
+    (one oversized segment beats silent data loss).
+    """
+
+    def __init__(self, path: str, *, max_bytes: int = 1 << 20,
+                 rotate: int = 4, sample_rate: float = 1.0, seed: int = 0,
+                 name: str = "capture", meta: Optional[Dict] = None):
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        if rotate < 1:
+            raise ValueError(f"rotate must be >= 1, got {rotate}")
+        if not 0.0 <= sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in [0, 1], "
+                             f"got {sample_rate}")
+        self.path = path
+        self.max_bytes = int(max_bytes)
+        self.rotate = int(rotate)
+        self.sample_rate = float(sample_rate)
+        self.name = name
+        self.meta = dict(meta or {})
+        self.written = 0        # events persisted (all segments)
+        self.sampled_out = 0    # events dropped by the sampler
+        self._rng = np.random.default_rng(seed)
+        self._f = None
+        self._size = 0
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    # -- segment plumbing ---------------------------------------------------
+
+    def _header(self) -> str:
+        # NO "requests" field: the segment is still streaming
+        return json.dumps({"schema": SCHEMA_VERSION, "kind": TRACE_KIND,
+                           "name": self.name, "meta": self.meta},
+                          sort_keys=True) + "\n"
+
+    def _open(self) -> None:
+        self._f = open(self.path, "w")
+        head = self._header()
+        self._f.write(head)
+        self._size = len(head)
+
+    def _shift(self) -> None:
+        self._f.close()
+        self._f = None
+        for i in range(self.rotate, 0, -1):
+            src = self.path if i == 1 else f"{self.path}.{i - 1}"
+            if os.path.exists(src):
+                os.replace(src, f"{self.path}.{i}")
+
+    # -- public API -----------------------------------------------------------
+
+    def write(self, event: Dict) -> bool:
+        """Persist one submit event; returns False when the sampler
+        dropped it."""
+        if (self.sample_rate < 1.0
+                and float(self._rng.random()) >= self.sample_rate):
+            self.sampled_out += 1
+            return False
+        if self._f is None:
+            self._open()
+        line = json.dumps(event, sort_keys=True) + "\n"
+        if (self._size + len(line) > self.max_bytes
+                and self._size > len(self._header())):
+            self._shift()
+            self._open()
+        self._f.write(line)
+        self._size += len(line)
+        self.written += 1
+        return True
+
+    def segments(self) -> List[str]:
+        """Existing segment paths, oldest first (``path.N`` ... ``path``)."""
+        out = [f"{self.path}.{i}" for i in range(self.rotate, 0, -1)]
+        out.append(self.path)
+        return [p for p in out if os.path.exists(p)]
+
+    def flush(self) -> None:
+        if self._f is not None:
+            self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.flush()
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "RotatingTraceSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def load_rotated(path: str, rotate: int = 64) -> Trace:
+    """Load a rotated capture back as ONE trace: every surviving segment
+    (``path.N`` oldest ... ``path`` newest), events concatenated in capture
+    order.  Each segment is validated as a standalone trace first, so a
+    corrupt rotation fails loudly with the segment named."""
+    seg_paths = [f"{path}.{i}" for i in range(rotate, 0, -1)]
+    seg_paths.append(path)
+    seg_paths = [p for p in seg_paths if os.path.exists(p)]
+    if not seg_paths:
+        raise TraceError(f"no trace segments at {path!r}")
+    segments = []
+    for p in seg_paths:
+        try:
+            segments.append(Trace.load(p))
+        except TraceError as e:
+            raise TraceError(f"segment {p!r}: {e}") from e
+    events = [ev for seg in segments for ev in seg.events]
+    return Trace(name=segments[-1].name, events=events,
+                 meta=dict(segments[-1].meta)).validate()
+
+
 class TraceRecorder:
     """Observes every ``QueryEngine.submit`` (engine ``recorder=`` hook).
 
@@ -312,11 +439,21 @@ class TraceRecorder:
     submit.  ``mesh``-carrying and non-CSR requests are not representable
     in schema v1 and raise — a trace that silently dropped them would
     replay lighter traffic than it recorded.
+
+    ``sink`` (a :class:`RotatingTraceSink`) streams each event to disk as
+    it arrives — the long-capture mode, where the in-memory event list
+    would grow without bound; pass ``keep_events=False`` alongside it to
+    record with O(1) memory.  The sink's ``sample_rate`` applies to the
+    sink only; the in-memory list (when kept) holds every event.
     """
 
-    def __init__(self, name: str = "capture", meta: Optional[Dict] = None):
+    def __init__(self, name: str = "capture", meta: Optional[Dict] = None,
+                 *, sink: Optional[RotatingTraceSink] = None,
+                 keep_events: bool = True):
         self.name = name
         self.meta = dict(meta or {})
+        self.sink = sink
+        self.keep_events = keep_events
         self.events: List[Dict] = []
         self._t0: Optional[float] = None
         #: id(obj) -> (spec, obj); the object reference keeps the id valid
@@ -344,7 +481,7 @@ class TraceRecorder:
                              "(trace schema v1 is single-process)")
         if self._t0 is None:
             self._t0 = t
-        self.events.append({
+        event = {
             "t": float(t - self._t0), "op": "submit",
             "A": self._spec_of(A), "B": self._spec_of(B),
             "M": self._spec_of(M),
@@ -352,7 +489,11 @@ class TraceRecorder:
             "algorithm": algorithm,
             "fp": {"A": fingerprint_digest(A), "B": fingerprint_digest(B),
                    "M": fingerprint_digest(M)},
-        })
+        }
+        if self.keep_events:
+            self.events.append(event)
+        if self.sink is not None:
+            self.sink.write(event)
 
     def trace(self) -> Trace:
         return Trace(name=self.name, events=list(self.events),

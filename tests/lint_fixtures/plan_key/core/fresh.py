@@ -1,5 +1,6 @@
 """Silent cases: token-carrying keys, annotated escapes, untainted keys."""
 from repro import caches
+from repro.core.formats import incremental_signature
 from repro.core.planner import cost_model_token, structure_signature
 
 _plan_cache = caches.LRUCache("fixture-fresh-plans", 8)
@@ -25,3 +26,14 @@ def structure_pure(a):
 
 def untainted(name):
     return _plan_cache.get(("static", name))
+
+
+def incremental_with_token(a):
+    key = ("isig", incremental_signature(a), cost_model_token())
+    return _plan_cache.get(key)
+
+
+def incremental_annotated(a):
+    # signature memo: pure structure identity, no planner election inside
+    key = ("isig", incremental_signature(a))
+    return _plan_cache.get(key)  # lint: plan-key-ok(isig memo)

@@ -1,5 +1,6 @@
 """Firing cases: structure-keyed cache access without the token."""
 from repro import caches
+from repro.core.formats import incremental_signature
 from repro.core.planner import structure_signature
 
 _plan_cache = caches.LRUCache("fixture-stale-plans", 8)
@@ -7,16 +8,23 @@ _plan_cache = caches.LRUCache("fixture-stale-plans", 8)
 
 def lookup(a, m):
     key = (structure_signature(a), structure_signature(m))
-    hit = _plan_cache.get(key)                   # finding (line 10)
+    hit = _plan_cache.get(key)                   # finding (line 11)
     if hit is None:
         hit = object()
-        _plan_cache.put(key, hit)                # finding (line 13)
+        _plan_cache.put(key, hit)                # finding (line 14)
     return hit
 
 
 def helper_lookup(a):
     sig = structure_signature(a)
-    return plan_cache_get((sig, "row"))          # finding (line 19)
+    return plan_cache_get((sig, "row"))          # finding (line 20)
+
+
+def incremental_lookup(a):
+    # the delta path's signature is a taint source like the full one: a
+    # token-less plan entry derived from it goes stale on recalibration
+    key = ("isig", incremental_signature(a))
+    return _plan_cache.get(key)                  # finding (line 27)
 
 
 def plan_cache_get(key):

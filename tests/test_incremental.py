@@ -1,0 +1,615 @@
+"""Incremental masked SpGEMM (ISSUE 8): delta-aware structures, plan
+revalidation, lane patching, and scoped serving-cache invalidation.
+
+The core contract: ANY interleaving of edge-delta batches and queries
+returns results bitwise-equal to a cold recompute on the post-delta
+matrices — in sync and async modes, with complemented masks, and with a
+tile-elected bucket riding along.
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro import caches
+from repro.core.formats import (CSR, CSRDelta, apply_csr_delta,
+                                bcsr_apply_delta, bcsr_from_csr,
+                                block_sparse, csr_from_dense, erdos_renyi,
+                                er_mask, incremental_signature)
+from repro.core.masked_spgemm import masked_spgemm
+from repro.core import planner
+from repro.core.planner import clear_plan_cache, plan, revalidate
+from repro.core.semiring import PLUS_TIMES
+from repro.serving import (QueryEngine, ResultCache, VirtualClock,
+                           row_bitmap)
+from repro.serving import burst
+from repro.serving.batcher import Batcher, Request
+
+from test_serving import (POOL, assert_same_result, drain_virtual, revalue)
+
+
+def dense(x: CSR) -> np.ndarray:
+    out = np.zeros(x.shape, dtype=x.data.dtype)
+    for i in range(x.shape[0]):
+        s, e = x.indptr[i], x.indptr[i + 1]
+        out[i, x.indices[s:e]] = x.data[s:e]
+    return out
+
+
+def random_delta(rng, x: CSR, k: int = 6) -> CSRDelta:
+    """A mixed batch: upserts to fresh and existing coordinates plus
+    deletes (some of entries that do not exist — must be no-ops)."""
+    m, n = x.shape
+    rows = rng.integers(0, m, k).astype(np.int64)
+    cols = rng.integers(0, n, k).astype(np.int64)
+    vals = rng.uniform(0.5, 1.5, k).astype(x.data.dtype)
+    delete = rng.random(k) < 0.3
+    return CSRDelta(rows, cols, vals, delete)
+
+
+def values_delta(rng, x: CSR, k: int = 4) -> CSRDelta:
+    """Upserts confined to EXISTING coordinates: structure survives."""
+    if x.nnz == 0:
+        return CSRDelta.upserts(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                                np.zeros(0, x.data.dtype))
+    pos = rng.integers(0, x.nnz, min(k, x.nnz))
+    er = np.repeat(np.arange(x.shape[0]), np.diff(x.indptr))
+    return CSRDelta.upserts(er[pos], x.indices[pos],
+                            rng.uniform(0.5, 1.5, len(pos)).astype(
+                                x.data.dtype))
+
+
+def burst_triple(n=128, seed=0):
+    """Sparse A/B + wide mask: the regime whose plan elects a
+    sequential-scatter kernel, so the engine serves it on the burst path."""
+    return (erdos_renyi(n, 2, seed=100 + seed),
+            erdos_renyi(n, 2, seed=200 + seed),
+            er_mask(n, max(8, n // 8), seed=300 + seed))
+
+
+# ---------------------------------------------------------------------------
+# formats: CSRDelta application + incremental signature
+# ---------------------------------------------------------------------------
+
+
+def test_apply_csr_delta_matches_dense_oracle():
+    rng = np.random.default_rng(0)
+    x = erdos_renyi(40, 3, seed=1)
+    d = CSRDelta(
+        np.array([2, 2, 7, 7, 39, 2]),
+        np.array([5, 6, 0, 0, 39, 5]),
+        np.array([1.5, 2.5, 3.5, 4.5, 5.5, 9.0], dtype=x.data.dtype),
+        np.array([False, False, False, True, False, False]))
+    res = apply_csr_delta(x, d)
+    want = dense(x)
+    want[2, 5] = 9.0          # second upsert to (2,5) wins (applied in order)
+    want[2, 6] = 2.5
+    want[7, 0] = 0.0          # upsert then delete -> absent
+    want[39, 39] = 5.5
+    got = dense(res.csr)
+    # delete leaves a structural zero NOT in the new structure
+    assert 0 not in res.csr.row(7)[0]
+    np.testing.assert_array_equal(got, want)
+    assert list(res.changed_rows) == [2, 7, 39]
+    assert not res.values_only
+    assert res.signature == incremental_signature(res.csr)
+    # untouched rows share identity-equal semantics (same entries)
+    np.testing.assert_array_equal(res.csr.row(5)[0], x.row(5)[0])
+    rng = rng  # noqa: F841
+
+
+def test_incremental_signature_chain_matches_recompute():
+    rng = np.random.default_rng(7)
+    x = erdos_renyi(48, 3, seed=2)
+    sig = incremental_signature(x)
+    for step in range(5):
+        d = random_delta(rng, x)
+        res = apply_csr_delta(x, d, old_signature=sig)
+        assert res.signature == incremental_signature(res.csr), step
+        x, sig = res.csr, res.signature
+    # signature distinguishes structures; equal structure -> equal sig
+    y = CSR(x.indptr, x.indices, x.data * 2.0, x.shape)
+    assert incremental_signature(y) == sig[:3] + (sig[3],)
+
+
+def test_values_only_delta_detected():
+    rng = np.random.default_rng(3)
+    x = erdos_renyi(32, 3, seed=3)
+    res = apply_csr_delta(x, values_delta(rng, x))
+    assert res.values_only
+    assert res.signature == incremental_signature(x)  # structure unchanged
+    # a structural insert flips the flag
+    free = (x.row(0)[0], 31)
+    col = next(c for c in range(32) if c not in set(free[0].tolist()))
+    res2 = apply_csr_delta(x, CSRDelta.upserts([0], [col], [1.0]))
+    assert not res2.values_only
+
+
+def test_apply_csr_delta_validates():
+    x = erdos_renyi(16, 2, seed=4)
+    with pytest.raises(ValueError):
+        apply_csr_delta(x, CSRDelta.upserts([16], [0], [1.0]))
+    with pytest.raises(ValueError):
+        apply_csr_delta(x, CSRDelta.upserts([0], [0], [1.0]),
+                        old_signature=("icsr", (8, 8), 0, 0))
+
+
+def test_bcsr_apply_delta_matches_rebuild():
+    rng = np.random.default_rng(5)
+    x = csr_from_dense(block_sparse(48, 8, 0.5, 0.6, seed=6))
+    b0 = bcsr_from_csr(x, 8)
+    d = random_delta(rng, x, k=8)
+    res = apply_csr_delta(x, d)
+    got = bcsr_apply_delta(b0, res.csr, res.changed_rows)
+    want = bcsr_from_csr(res.csr, 8)
+    np.testing.assert_array_equal(np.asarray(got.indptr),
+                                  np.asarray(want.indptr))
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(got.blocks),
+                                  np.asarray(want.blocks))
+
+
+# ---------------------------------------------------------------------------
+# planner: revalidate
+# ---------------------------------------------------------------------------
+
+
+def test_revalidate_survives_row_local_delta_and_stamps_cache():
+    rng = np.random.default_rng(8)
+    A, B, M = burst_triple(seed=1)
+    p0 = plan(A, B, M)
+    res = apply_csr_delta(M, random_delta(rng, M, k=4))
+    p1, survived = revalidate(p0, A, B, res.csr)
+    assert survived
+    assert p1.algorithm == p0.algorithm
+    # the surviving plan was stamped under the post-delta key: the serve
+    # path's plan() call must hit it (identity, not just equality)
+    p2 = plan(A, B, res.csr)
+    assert p2 is p1
+
+
+def test_revalidate_goes_cold_past_hysteresis():
+    rng = np.random.default_rng(9)
+    A, B, M = burst_triple(seed=2)
+    p0 = plan(A, B, M)
+    rows = rng.integers(0, M.shape[0], 3000).astype(np.int64)
+    cols = rng.integers(0, M.shape[1], 3000).astype(np.int64)
+    big = CSRDelta.upserts(rows, cols,
+                           np.ones(3000, dtype=M.data.dtype))
+    res = apply_csr_delta(M, big)
+    p1, survived = revalidate(p0, A, B, res.csr)
+    assert not survived          # nnz drift far beyond the band
+    want = plan(A, B, res.csr)
+    assert p1.algorithm == want.algorithm
+
+
+def test_revalidate_rejects_mismatched_operands():
+    A, B, M = burst_triple(seed=3)
+    p0 = plan(A, B, M)
+    A2, B2, M2 = POOL[0]
+    p1, survived = revalidate(p0, A2, B2, M2)
+    assert not survived          # different shapes: cold re-plan
+
+
+# ---------------------------------------------------------------------------
+# burst: lane patching + lineage
+# ---------------------------------------------------------------------------
+
+
+def test_patched_program_bitwise_equals_cold_rebuild():
+    rng = np.random.default_rng(10)
+    A, B, M = burst_triple(seed=4)
+    p0 = plan(A, B, M)
+    parent = burst.get_program(A, B, M, PLUS_TIMES, wm=p0.widths[2])
+    assert parent is not None
+    dm = CSRDelta.upserts(np.array([3, 3, 9]), np.array([1, 2, 3]),
+                          np.ones(3, dtype=M.data.dtype))
+    M1 = apply_csr_delta(M, dm).csr
+    got = parent.patched(A, B, M1, np.array([3, 9], np.int64))
+    assert got is not None
+    prog, lanes = got
+    assert lanes > 0
+    cold = burst.BurstProgram(A, B, M1, PLUS_TIMES, p0.widths[2])
+    # host lane tables byte-equal => device results bitwise-equal, and the
+    # jitted fold is the SAME compiled callable (shape-memoized)
+    np.testing.assert_array_equal(prog._IA, cold._IA)
+    np.testing.assert_array_equal(prog._BV, cold._BV)
+    np.testing.assert_array_equal(prog._present_host, cold._present_host)
+    assert prog._fn is cold._fn
+    out_p = prog.run([A])
+    out_c = cold.run([A])
+    assert_same_result(out_p[0], out_c[0])
+
+
+def test_patch_regathers_b_values_only_delta():
+    rng = np.random.default_rng(11)
+    A, B, M = burst_triple(seed=5)
+    p0 = plan(A, B, M)
+    parent = burst.get_program(A, B, M, PLUS_TIMES, wm=p0.widths[2])
+    B1 = apply_csr_delta(B, values_delta(rng, B)).csr
+    got = parent.patched(A, B1, M, np.zeros(0, np.int64))
+    assert got is not None
+    prog, _ = got
+    cold = burst.BurstProgram(A, B1, M, PLUS_TIMES, p0.widths[2])
+    np.testing.assert_array_equal(prog._BV, cold._BV)
+    assert_same_result(prog.run([A])[0], cold.run([A])[0])
+
+
+def test_patch_refuses_b_structural_delta():
+    A, B, M = burst_triple(seed=6)
+    p0 = plan(A, B, M)
+    parent = burst.get_program(A, B, M, PLUS_TIMES, wm=p0.widths[2])
+    B1 = apply_csr_delta(B, CSRDelta.upserts([0], [5], [1.0])).csr
+    assert parent.patched(A, B1, M, np.array([0], np.int64)) is None
+
+
+def test_lineage_rederives_evicted_patch():
+    A, B, M = burst_triple(seed=7)
+    p0 = plan(A, B, M)
+    parent = burst.get_program(A, B, M, PLUS_TIMES, wm=p0.widths[2])
+    dm = CSRDelta.upserts(np.array([2]), np.array([4]),
+                          np.ones(1, dtype=M.data.dtype))
+    M1 = apply_csr_delta(M, dm).csr
+    changed = np.array([2], np.int64)
+    prog, lanes = burst.patch_program(parent, A, B, M1, PLUS_TIMES,
+                                      p0.widths[2], changed)
+    assert prog is not None and lanes > 0
+    burst.record_lineage(A, B, M1, PLUS_TIMES, p0.widths[2], parent, changed)
+    # evict the patched program; get_program must re-derive via lineage
+    burst._patches.clear()
+    again = burst.get_program(A, B, M1, PLUS_TIMES, wm=p0.widths[2])
+    assert again is not None
+    np.testing.assert_array_equal(again._IA, prog._IA)
+
+
+# ---------------------------------------------------------------------------
+# cache: row bitmaps + scoped invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_row_bitmap_coarse_coverage():
+    assert row_bitmap([], 64) == 0
+    assert row_bitmap([0], 64) == 1
+    assert row_bitmap([63], 64) == 1 << 63
+    full = row_bitmap(range(128), 128)
+    assert full == (1 << 64) - 1
+    # disjoint halves -> disjoint bitmaps
+    lo = row_bitmap(range(0, 64), 128)
+    hi = row_bitmap(range(64, 128), 128)
+    assert lo & hi == 0
+
+
+def test_result_cache_scoped_invalidation():
+    rc = ResultCache(capacity=16, name="test-inc-scoped")
+    try:
+        rc.put("k1", "v1", tags=[("sigA", row_bitmap([0, 1], 64))])
+        rc.put("k2", "v2", tags=[("sigA", row_bitmap([40, 41], 64))])
+        rc.put("k3", "v3", tags=[("sigB", row_bitmap([0], 64))])
+        # row-scoped: only the overlapping entry of sigA goes
+        n = rc.invalidate("sigA", row_bitmap([1], 64))
+        assert n == 1
+        assert rc.get("k1") is None
+        assert rc.get("k2") == "v2"
+        assert rc.get("k3") == "v3"
+        # unscoped: everything tagged sigA goes, sigB untouched
+        assert rc.invalidate("sigA") == 1
+        assert rc.get("k2") is None
+        assert rc.get("k3") == "v3"
+        assert rc.invalidate("missing") == 0
+    finally:
+        rc.unregister()
+
+
+def test_result_cache_tag_index_prunes_dead_entries():
+    rc = ResultCache(capacity=2, name="test-inc-prune")
+    try:
+        for i in range(32):      # LRU evicts most; tags accumulate
+            rc.put(("k", i), i, tags=[(("sig", i), 1)])
+        total = sum(len(ix) for ix in rc._tags.values())
+        assert total <= 4 * rc.capacity
+    finally:
+        rc.unregister()
+
+
+# ---------------------------------------------------------------------------
+# batcher: rekey
+# ---------------------------------------------------------------------------
+
+
+def _req(key, payload):
+    return Request(A=payload, B=None, M=None, semiring=None,
+                   complement=False, algorithm=None, mesh=None, axis="data",
+                   ticket=None, post=None, cache_key=("ck",),
+                   submitted_at=0.0, key=key)
+
+
+def test_batcher_rekey_moves_and_rewrites():
+    b = Batcher(max_batch=8)
+    b.add(_req(("old",), 1))
+    b.add(_req(("old",), 2))
+    b.add(_req(("other",), 3))
+
+    def rw(r):
+        r.cache_key = None
+
+    assert b.rekey(("old",), ("new",), rw) == 2
+    assert b.rekey(("old",), ("new",)) == 0       # already moved
+    assert b.rekey(("x",), ("x",)) == 0           # equal keys: no-op
+    buckets = {bk[0].key: bk for bk in b.pop_all()}
+    assert len(buckets[("new",)]) == 2
+    assert all(r.cache_key is None for r in buckets[("new",)])
+    assert len(buckets[("other",)]) == 1
+    assert buckets[("other",)][0].cache_key == ("ck",)
+    assert b.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: submit_delta
+# ---------------------------------------------------------------------------
+
+
+def test_submit_delta_patches_burst_program_and_counts():
+    A, B, M = burst_triple(seed=8)
+    with QueryEngine(async_mode=False) as eng:
+        t = eng.submit(A, B, M)
+        eng.flush()
+        t.result()
+        assert eng.metrics.bucket_log()[-1]["route"] == "burst"
+        dm = CSRDelta.upserts(np.array([3, 3, 7]), np.array([1, 2, 3]),
+                              np.ones(3, dtype=M.data.dtype))
+        out = eng.submit_delta(A, B, M, delta_m=dm)
+        assert out.plan_survived
+        assert out.lanes_patched > 0
+        assert list(out.changed_rows) == [3, 7]
+        t = eng.submit(out.A, out.B, out.M)
+        eng.flush()
+        got = t.result()
+        assert eng.metrics.bucket_log()[-1]["route"] == "burst"
+        snap = eng.metrics.snapshot()
+        assert snap["delta_applied"] == 1
+        assert snap["plans_revalidated"] == 1
+        assert snap["lanes_patched"] == out.lanes_patched
+        assert snap["rows_invalidated"] == 2
+    caches.clear_all()
+    clear_plan_cache()
+    assert_same_result(got, masked_spgemm(out.A, out.B, out.M))
+
+
+def test_submit_delta_requires_a_delta_and_host_csr():
+    A, B, M = POOL[0]
+    with QueryEngine() as eng:
+        with pytest.raises(ValueError):
+            eng.submit_delta(A, B, M)
+        with pytest.raises(TypeError):
+            eng.submit_delta(object(), B, M,
+                             delta_m=CSRDelta.upserts([0], [0], [1.0]))
+
+
+def test_delta_flush_scoped_to_structure_fingerprint():
+    """Regression (ISSUE 8 bugfix): a delta to one structure must not
+    drop cached results of OTHER structures sharing the engine."""
+    A1, B1, M1 = burst_triple(seed=9)
+    A2, B2, M2 = POOL[0]
+    with QueryEngine(async_mode=False) as eng:
+        t1 = eng.submit(A1, B1, M1)
+        t2 = eng.submit(A2, B2, M2)
+        eng.flush()
+        t1.result(), t2.result()
+        assert len(eng.results) == 2
+        db = CSRDelta.upserts(np.array([5]), np.array([6]),
+                              np.ones(1, dtype=B1.data.dtype))
+        out = eng.submit_delta(A1, B1, M1, delta_b=db)
+        assert out.entries_evicted == 1      # structure 1's entry only
+        hits0 = eng.metrics.snapshot()["result_cache_hits"]
+        eng.submit(A2, B2, M2)               # structure 2 still hits
+        assert eng.metrics.snapshot()["result_cache_hits"] == hits0 + 1
+
+
+def test_delta_invalidation_row_scoped():
+    """An A delta confined to rows the mask never covers leaves the entry
+    cached (the result provably cannot differ there); a covered-row delta
+    evicts it."""
+    A, B, _ = burst_triple(seed=10)
+    m = A.shape[0]
+    md = np.zeros((m, m), dtype=np.float32)
+    md[: m // 2] = (np.random.default_rng(0).random((m // 2, m))
+                    < 0.1).astype(np.float32)
+    M = csr_from_dense(md)                   # rows >= m//2 mask-empty
+    with QueryEngine(async_mode=False) as eng:
+        t = eng.submit(A, B, M)
+        eng.flush()
+        t.result()
+        da = CSRDelta.upserts(np.array([m - 1]), np.array([0]),
+                              np.ones(1, dtype=A.data.dtype))
+        out = eng.submit_delta(A, B, M, delta_a=da)
+        assert out.entries_evicted == 0      # outside the mask's coverage
+        # same delta aimed at a covered row: the entry must go
+        t = eng.submit(out.A, B, M)
+        eng.flush()
+        t.result()
+        da2 = CSRDelta.upserts(np.array([0]), np.array([1]),
+                               np.ones(1, dtype=A.data.dtype))
+        out2 = eng.submit_delta(out.A, B, M, delta_a=da2)
+        assert out2.entries_evicted == 1
+
+
+def test_rebase_queued_requests_onto_post_delta_bucket():
+    A, B, M = burst_triple(seed=11)
+    with QueryEngine(async_mode=False, max_batch=32) as eng:
+        tickets = [eng.submit(revalue(A, s), B, M) for s in range(3)]
+        assert eng._batcher.pending == 3
+        # a coordinate NOT in M: the delta must really change the mask's
+        # structure (an existing coordinate would keep the bucket key)
+        col = next(c for c in range(M.shape[1])
+                   if c not in set(M.row(4)[0].tolist()))
+        dm = CSRDelta.upserts(np.array([4]), np.array([col]),
+                              np.ones(1, dtype=M.data.dtype))
+        out = eng.submit_delta(A, B, M, delta_m=dm, rebase_queued=True)
+        assert out.rekeyed == 3
+        tickets.append(eng.submit(revalue(A, 99), out.B, out.M))
+        eng.flush()
+        log = eng.metrics.bucket_log()
+        # pre-delta stragglers + post-delta arrival flushed as ONE bucket
+        assert log[-1]["size"] == 4
+        results = [t.result() for t in tickets]
+    caches.clear_all()
+    clear_plan_cache()
+    for s, got in zip([0, 1, 2, 99], results):
+        want = masked_spgemm(revalue(A, s), out.B, out.M)
+        assert_same_result(got, want)
+
+
+def test_submit_delta_chain_signature_memo():
+    """Chained deltas reuse the memoized incremental signature (the
+    O(changed-rows) update path) and stay bitwise-correct."""
+    rng = np.random.default_rng(12)
+    A, B, M = burst_triple(seed=12)
+    with QueryEngine(async_mode=False) as eng:
+        eng.submit(A, B, M).result()
+        for step in range(3):
+            dm = random_delta(rng, M, k=3)
+            out = eng.submit_delta(A, B, M, delta_m=dm)
+            M = out.M
+            assert out.signatures["M"] == incremental_signature(M)
+        got = eng.submit(A, B, M).result()
+    caches.clear_all()
+    clear_plan_cache()
+    assert_same_result(got, masked_spgemm(A, B, M))
+
+
+# ---------------------------------------------------------------------------
+# property: any delta/query interleaving == cold recompute, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       async_mode=st.sampled_from([False, True]),
+       n_steps=st.integers(4, 12))
+def test_delta_query_interleaving_bitwise_equals_cold(seed, async_mode,
+                                                      n_steps):
+    rng = np.random.default_rng(seed)
+    A, B, M = POOL[int(rng.integers(3))]
+    A = revalue(A, int(rng.integers(1 << 20)))
+    kw = dict(async_mode=async_mode, max_batch=4)
+    if async_mode:
+        kw["clock"] = VirtualClock()
+    checks = []
+    with QueryEngine(**kw) as eng:
+        for step in range(n_steps):
+            action = int(rng.integers(4))
+            if action == 0:
+                which = int(rng.integers(3))
+                target = (A, B, M)[which]
+                d = (values_delta(rng, target) if rng.random() < 0.3
+                     else random_delta(rng, target, k=4))
+                out = eng.submit_delta(
+                    A, B, M,
+                    delta_a=d if which == 0 else None,
+                    delta_b=d if which == 1 else None,
+                    delta_m=d if which == 2 else None)
+                A, B, M = out.A, out.B, out.M
+            elif action in (1, 2):
+                comp = action == 2
+                t = eng.submit(A, B, M, complement=comp)
+                checks.append((t, A, B, M, comp))
+            else:
+                At, Bt, Mt = POOL[3]      # tile-elected bucket rides along
+                Aq = revalue(At, 500 + step)
+                checks.append((eng.submit(Aq, Bt, Mt), Aq, Bt, Mt, False))
+        if async_mode:
+            drain_virtual(eng, [c[0] for c in checks])
+        else:
+            eng.flush()
+        results = [(c[0].result(),) + c[1:] for c in checks]
+    # cold recompute on the post-delta operands each query was issued with
+    caches.clear_all()
+    clear_plan_cache()
+    for got, Aq, Bq, Mq, comp in results:
+        want = masked_spgemm(Aq, Bq, Mq, complement=comp)
+        assert_same_result(got, want, complement=comp)
+
+
+# ---------------------------------------------------------------------------
+# trace: rotating sink round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_rotating_sink_segments_standalone_and_round_trip(tmp_path):
+    from repro.serving.trace import (RotatingTraceSink, Trace, load_rotated,
+                                     synthesize_trace)
+    tr = synthesize_trace(n=48, queries=24, n_structs=2, block_struct=False)
+    path = os.path.join(str(tmp_path), "cap.jsonl")
+    with RotatingTraceSink(path, max_bytes=4096, rotate=8,
+                           name="cap") as sink:
+        for ev in tr.events:
+            sink.write(ev)
+    segs = sink.segments()
+    assert len(segs) > 1                      # rotation actually happened
+    total = 0
+    for p in segs:
+        seg = Trace.load(p)                   # standalone schema-valid
+        for ev in seg.events:
+            assert ev["op"] == "submit"
+        total += seg.n_requests
+    assert total == 24
+    merged = load_rotated(path)
+    assert merged.events == tr.events         # byte-level field round-trip
+    assert merged.materialized(check=True)    # fingerprints survive rotation
+
+
+def test_rotating_sink_drops_oldest_past_rotate(tmp_path):
+    from repro.serving.trace import RotatingTraceSink, synthesize_trace
+    tr = synthesize_trace(n=48, queries=24, n_structs=2, block_struct=False)
+    path = os.path.join(str(tmp_path), "cap.jsonl")
+    with RotatingTraceSink(path, max_bytes=4096, rotate=1) as sink:
+        for ev in tr.events:
+            sink.write(ev)
+    assert len(sink.segments()) <= 2          # path.1 + path only
+
+
+def test_rotating_sink_sampling_deterministic(tmp_path):
+    from repro.serving.trace import RotatingTraceSink, synthesize_trace
+    tr = synthesize_trace(n=48, queries=24, n_structs=2, block_struct=False)
+    kept = []
+    for run in range(2):
+        path = os.path.join(str(tmp_path), f"s{run}.jsonl")
+        with RotatingTraceSink(path, sample_rate=0.5, seed=7) as sink:
+            kept.append([sink.write(ev) for ev in tr.events])
+        assert sink.written + sink.sampled_out == 24
+    assert kept[0] == kept[1]                 # seeded: same events sampled
+    assert 0 < sum(kept[0]) < 24
+
+
+def test_recorder_streams_to_sink(tmp_path):
+    from repro.serving.trace import RotatingTraceSink, TraceRecorder, Trace
+    A, B, M = POOL[0]
+    path = os.path.join(str(tmp_path), "live.jsonl")
+    sink = RotatingTraceSink(path, name="live")
+    rec = TraceRecorder(name="live", sink=sink, keep_events=False)
+    with QueryEngine(recorder=rec) as eng:
+        for s in range(3):
+            eng.submit(revalue(A, s), B, M)
+        eng.flush()
+    sink.close()
+    assert rec.events == []                   # O(1) memory capture
+    got = Trace.load(path)
+    assert got.n_requests == 3
+    assert got.materialized(check=True)
+
+
+def test_rotating_sink_validates_knobs(tmp_path):
+    from repro.serving.trace import RotatingTraceSink
+    path = os.path.join(str(tmp_path), "x.jsonl")
+    with pytest.raises(ValueError):
+        RotatingTraceSink(path, max_bytes=0)
+    with pytest.raises(ValueError):
+        RotatingTraceSink(path, rotate=0)
+    with pytest.raises(ValueError):
+        RotatingTraceSink(path, sample_rate=1.5)

@@ -88,12 +88,14 @@ def test_cache_registry_fixture():
 def test_plan_cache_key_fixture():
     findings = _run("plan_key", "plan-cache-key")
     assert _sites(findings, "plan-cache-key") == [
-        ("core/stale.py", 10),    # get(key) — tainted, tokenless
-        ("core/stale.py", 13),    # put(key, ...)
-        ("core/stale.py", 19),    # *cache_get helper with tainted key
+        ("core/stale.py", 11),    # get(key) — tainted, tokenless
+        ("core/stale.py", 14),    # put(key, ...)
+        ("core/stale.py", 20),    # *cache_get helper with tainted key
+        ("core/stale.py", 27),    # incremental_signature-tainted key
     ]
     # fresh.py: token in key (direct + via local), annotated
-    # structure-pure site, untainted key — all silent
+    # structure-pure site, untainted key, token-carrying + annotated
+    # incremental-signature keys — all silent
     assert not [f for f in findings if f.path == "core/fresh.py"]
 
 

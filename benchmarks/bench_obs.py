@@ -1,0 +1,253 @@
+"""Observability overhead gate: traced serving must cost (almost) nothing.
+
+PR 9's tracing claims near-zero disabled cost and low enabled cost.  This
+bench holds the serving layer to that and writes
+``results/bench/obs_overhead_grid.json``:
+
+* ``overhead`` — one burst stream served twice by identical engines, once
+  untraced and once under ``obs.tracing()``: traced throughput must stay
+  within ``OVERHEAD_TOLERANCE`` of untraced, results bitwise equal, and
+  ``deterministic_snapshot()`` EQUAL (spans never feed scheduling)
+  (``_obs_overhead_ok``).
+* ``golden`` — the committed golden trace replayed traced and untraced:
+  replay digests and deterministic counters must match
+  (``_golden_traced_equal``).
+* ``scrape`` — ``QueryEngine(expose_port=0)``: /metrics must parse under
+  :func:`repro.obs.exposition.parse_prometheus` and /health must report a
+  live engine (``_metrics_parse_ok``).
+* ``export`` — the traced run's spans must survive the Chrome
+  trace-event/Perfetto round trip (``_export_ok``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+import urllib.request
+from typing import Dict, List
+
+import numpy as np
+
+from repro import obs
+from repro.core.formats import CSR, er_mask, erdos_renyi
+from repro.obs.exposition import parse_prometheus
+from repro.serving import QueryEngine
+from repro.serving.trace import Trace, golden_trace_path, replay_trace
+
+from .common import save
+
+#: traced serve wall time may exceed untraced by at most this fraction
+OVERHEAD_TOLERANCE = 0.05
+
+
+def _revalue(x: CSR, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    return CSR(x.indptr, x.indices,
+               rng.uniform(0.5, 1.5, x.nnz).astype(np.float32), x.shape)
+
+
+def _burst(n: int, queries: int):
+    A0 = erdos_renyi(n, 2, seed=100)
+    B0 = erdos_renyi(n, 2, seed=200)
+    M0 = er_mask(n, max(8, n // 8), seed=300)
+    return [(_revalue(A0, 1000 + q), B0, M0) for q in range(queries)]
+
+
+def _serve(engine: QueryEngine, stream) -> List:
+    tickets = [engine.submit(A, B, M) for A, B, M in stream]
+    engine.flush()
+    out = [t.result() for t in tickets]
+    for r in out:
+        r.vals.block_until_ready()
+    return out
+
+
+def _bitwise_equal(got, want) -> bool:
+    return (np.array_equal(np.asarray(got.vals), np.asarray(want.vals))
+            and np.array_equal(np.asarray(got.present),
+                               np.asarray(want.present))
+            and np.array_equal(np.asarray(got.mask_cols),
+                               np.asarray(want.mask_cols)))
+
+
+def _timed_pair(fn_a, fn_b, iters: int):
+    """A/B timing built for a noisy shared host: median of per-pair
+    ratios, with per-iteration order alternation.
+
+    Each iteration times both variants back to back and yields one
+    paired ratio.  Contention epochs longer than a pair (~100ms) slow
+    both sides of the pair equally, so each ratio is drift-immune; brief
+    one-sided spikes produce outlier ratios that the median over many
+    pairs discards.  Alternation randomizes the sign of mid-pair epoch
+    boundaries.  GC is paused so collection pauses triggered by one
+    side's allocations aren't billed to it alone.
+
+    (Two rejected estimators, for the next person tempted to "simplify":
+    independent min-of-iters is corrupted by brief FAST windows that
+    only one side samples — it reported traced 13% faster than untraced,
+    physically impossible; and any two-engine design carries a ~4%
+    allocation-layout bias between instances, so both callbacks must
+    drive the SAME engine.)
+
+    Returns ``(t_a, t_b)`` where ``t_a`` is the median A pass and
+    ``t_b = t_a * r`` with ``r`` the midmean (mean of the interquartile
+    range) of the pair ratios — as outlier-proof as the median but with
+    ~20% less trial-to-trial variance, which is exactly the margin a 5%
+    bar needs when the true overhead is ~2%.  ``t_b / t_a`` IS the
+    robust overhead estimate.
+    """
+    import gc
+    samples_a, ratios = [], []
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for i in range(max(1, iters)):
+            first, second = (fn_a, fn_b) if i % 2 == 0 else (fn_b, fn_a)
+            t0 = time.perf_counter()
+            first()
+            t1 = time.perf_counter()
+            second()
+            t2 = time.perf_counter()
+            dt_first, dt_second = t1 - t0, t2 - t1
+            dt_a, dt_b = ((dt_first, dt_second) if i % 2 == 0
+                          else (dt_second, dt_first))
+            samples_a.append(dt_a)
+            ratios.append(dt_b / max(dt_a, 1e-12))
+            gc.collect(0)  # drain young garbage between iterations
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    t_a = sorted(samples_a)[len(samples_a) // 2]
+    rs = sorted(ratios)
+    mid = rs[len(rs) // 4: -(len(rs) // 4) or None]
+    ratio = sum(mid) / len(mid)
+    return t_a, t_a * ratio
+
+
+def run(n: int = 512, queries: int = 48, iters: int = 3,
+        smoke: bool = False) -> Dict:
+    table: Dict = {}
+    stream = _burst(n, queries)
+
+    # ---- traced vs untraced serve throughput ------------------------------
+    # Correctness uses TWO identical engines (one never traced, one traced)
+    # so deterministic_snapshot() equality proves spans don't leak into the
+    # metrics either engine accumulates.  Timing uses ONE engine serving
+    # the same stream alternately traced and untraced: two engine
+    # instances carry a measurable (~4%) allocation-layout bias that would
+    # otherwise drown the ~1% tracing cost under a 5% bar.
+    # cache_results=False so every query exercises the full
+    # span-instrumented execute path.
+    plain = QueryEngine(cache_results=False)
+    traced = QueryEngine(cache_results=False)
+    try:
+        want = _serve(plain, stream)                 # warm both engines
+        with obs.tracing(capacity=16384) as tr:
+            got = _serve(traced, stream)
+        sink = tr.sink
+        spans = sink.spans()          # one pass worth, before timing refills
+        bitwise_ok = all(_bitwise_equal(g, w) for g, w in zip(got, want))
+        # one pass each at this point: identical deterministic state
+        snap_equal = (plain.metrics.deterministic_snapshot()
+                      == traced.metrics.deterministic_snapshot())
+
+        def plain_pass():
+            _serve(plain, stream)
+
+        def traced_pass():
+            with obs.tracing(sink):
+                _serve(plain, stream)
+
+        t_plain, t_traced = _timed_pair(plain_pass, traced_pass, iters)
+        overhead = t_traced / max(t_plain, 1e-12) - 1.0
+        span_names = sorted({r["name"] for r in spans})
+        table["overhead"] = {
+            "n": n, "queries": queries, "iters": iters,
+            "untraced_s": t_plain, "traced_s": t_traced,
+            "untraced_qps": queries / max(t_plain, 1e-12),
+            "traced_qps": queries / max(t_traced, 1e-12),
+            "overhead_frac": overhead,
+            "tolerance": OVERHEAD_TOLERANCE,
+            "spans_per_pass": len(spans),
+            "span_names": span_names,
+            "bitwise_equal": bitwise_ok,
+            "deterministic_snapshot_equal": snap_equal,
+        }
+        overhead_ok = (overhead <= OVERHEAD_TOLERANCE and bitwise_ok
+                       and snap_equal)
+        print(f"[obs] overhead n={n} q={queries}: untraced "
+              f"{t_plain * 1e3:7.1f}ms traced {t_traced * 1e3:7.1f}ms "
+              f"(+{overhead * 100:.2f}%, bar {OVERHEAD_TOLERANCE * 100:.0f}%)"
+              f" spans={len(spans)}/pass bitwise="
+              f"{'OK' if bitwise_ok else 'FAIL'} snap_eq={snap_equal}",
+              flush=True)
+    finally:
+        plain.close()
+        traced.close()
+
+    # ---- golden trace: traced replay must not perturb determinism --------
+    trace = Trace.load(golden_trace_path())
+    rep_plain = replay_trace(trace)
+    with obs.tracing():
+        rep_traced = replay_trace(trace)
+    golden_equal = (rep_plain.digest == rep_traced.digest
+                    and rep_plain.counters == rep_traced.counters
+                    and rep_plain.schedule == rep_traced.schedule)
+    table["golden"] = {
+        "trace": trace.name, "n_requests": rep_plain.n_requests,
+        "untraced_digest": rep_plain.digest,
+        "traced_digest": rep_traced.digest,
+        "counters_equal": rep_plain.counters == rep_traced.counters,
+    }
+    print(f"[obs] golden  digests untraced={rep_plain.digest} "
+          f"traced={rep_traced.digest} equal={golden_equal}", flush=True)
+
+    # ---- /metrics + /health scrape ----------------------------------------
+    scrape_n = 64 if smoke else n
+    engine = QueryEngine(expose_port=0)
+    try:
+        _serve(engine, _burst(scrape_n, 4))
+        _serve(engine, _burst(scrape_n, 4))          # replay -> cache hits
+        base = engine.obs_server.url
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            text = r.read().decode("utf-8")
+        with urllib.request.urlopen(f"{base}/health", timeout=10) as r:
+            health = json.loads(r.read().decode("utf-8"))
+        samples = parse_prometheus(text)
+        hits = samples.get(("repro_serve_result_cache_hits_total", ()), 0)
+        parse_ok = (len(samples) > 0 and health["status"] == "ok"
+                    and hits == 4.0)
+        table["scrape"] = {
+            "url": "/metrics", "samples": len(samples),
+            "result_cache_hits": hits, "health": health,
+        }
+        print(f"[obs] scrape  {len(samples)} samples, hits={hits}, "
+              f"health={health['status']}", flush=True)
+    finally:
+        engine.close()
+
+    # ---- Perfetto/Chrome export round trip --------------------------------
+    events = obs.chrome_trace(spans)
+    with tempfile.TemporaryDirectory(prefix="repro-obs-") as d:
+        path = os.path.join(d, "trace.json")
+        obs.save_chrome_trace(path, spans)
+        with open(path) as f:
+            loaded = json.load(f)
+    export_ok = (len(loaded["traceEvents"]) == len(spans)
+                 and len(events["traceEvents"]) == len(spans)
+                 and all(e["ph"] == "X" for e in events["traceEvents"]))
+    table["export"] = {"events": len(events["traceEvents"])}
+    print(f"[obs] export  {len(events['traceEvents'])} trace events "
+          f"(round trip {'OK' if export_ok else 'FAIL'})", flush=True)
+
+    table["_obs_overhead_ok"] = bool(overhead_ok)
+    table["_golden_traced_equal"] = bool(golden_equal)
+    table["_metrics_parse_ok"] = bool(parse_ok)
+    table["_export_ok"] = bool(export_ok)
+    save("obs_overhead_grid", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -32,6 +32,13 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
 def save(name: str, payload) -> str:
     out = results_dir()
     os.makedirs(out, exist_ok=True)
+    if isinstance(payload, dict) and "_cache_info" not in payload:
+        # end-of-run registry state (hit/miss/occupancy per process cache)
+        # rides along with every grid: a cost-model regression often shows
+        # up first as a plan-cache hit-rate change, and the committed grids
+        # are the only durable record of a full-tier run
+        from repro import caches
+        payload["_cache_info"] = caches.cache_info()
     path = os.path.join(out, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -16,7 +16,8 @@ import time
 import traceback
 
 ORDER = ("density", "planner", "tile", "dist", "serve", "incremental",
-         "replay", "triangle", "rmat", "scaling", "ktruss", "bc", "block")
+         "replay", "obs", "triangle", "rmat", "scaling", "ktruss", "bc",
+         "block")
 
 
 def main() -> None:
@@ -53,9 +54,9 @@ def main() -> None:
         only = set(ORDER)
 
     from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
-                   bench_incremental, bench_ktruss, bench_planner,
-                   bench_replay, bench_rmat_scale, bench_scaling,
-                   bench_serve, bench_tile, bench_triangle)
+                   bench_incremental, bench_ktruss, bench_obs,
+                   bench_planner, bench_replay, bench_rmat_scale,
+                   bench_scaling, bench_serve, bench_tile, bench_triangle)
     if args.smoke:
         density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
                           iters=3)
@@ -70,6 +71,9 @@ def main() -> None:
         incremental_kw = dict(rounds=3, queries_per_round=2)
         # the golden trace is tiny; smoke trims timing iters + the knob grid
         replay_kw = dict(iters=1, smoke=True)
+        # iters stays high even in smoke: the gate is a ratio of two
+        # noisy ~ms passes; the median needs samples to converge
+        obs_kw = dict(n=128, queries=16, iters=21, smoke=True)
     else:
         density_kw = dict(n=2048 if args.full else 1024)
         tile_kw = dict(n=512)
@@ -82,6 +86,11 @@ def main() -> None:
         incremental_kw = dict(n=2048 if args.full else 1024,
                               rounds=12 if args.full else 8)
         replay_kw = dict(iters=3, autotune_rounds=2 if args.full else 1)
+        # heavier per-query work than serve_kw (the ~µs-per-span budget
+        # amortizes to ~1% of an n=1024 pass) and many paired iterations:
+        # the gate is a ratio of two noisy ~40ms passes, so the median
+        # needs samples to converge under scheduler jitter (~5s total)
+        obs_kw = dict(n=1024, queries=128 if args.full else 96, iters=61)
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
         "planner": lambda: bench_planner.run(**density_kw),
@@ -90,6 +99,7 @@ def main() -> None:
         "serve": lambda: bench_serve.run(**serve_kw),
         "incremental": lambda: bench_incremental.run(**incremental_kw),
         "replay": lambda: bench_replay.run(**replay_kw),
+        "obs": lambda: bench_obs.run(**obs_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

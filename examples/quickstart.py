@@ -280,6 +280,48 @@ def main():
     #     sink = RotatingTraceSink("trace.jsonl", max_bytes=1 << 20)
     #     rec = TraceRecorder(engine, sink=sink, keep_events=False)
 
+    # --- 12. observability: spans, plan explain, /metrics ------------------
+    #
+    # `repro.obs` threads structured tracing through the whole request
+    # lifecycle (submit -> queue wait -> plan -> host prep -> device exec
+    # -> cache put/hit, plus the delta path).  Off by default: every
+    # instrumented site costs one global read + one branch until you
+    # enable it — bench_obs.py pins traced serving within 5% of untraced
+    # with bitwise-equal results and an EQUAL deterministic_snapshot()
+    # (spans never feed scheduling).
+    from repro import obs
+    with obs.tracing() as trc:                     # scoped enable
+        with QueryEngine(max_batch=8) as engine:
+            for s in range(4):
+                engine.submit(fresh_values(A_c, s), B_c, M_c)
+            engine.flush()
+    spans = trc.sink.spans()
+    print("observed span kinds:", sorted({r["name"] for r in spans}))
+
+    # every `serve.plan` span carries `planner.explain(plan)` — the
+    # elected algorithm, the cost-feature vector, and each candidate's
+    # modeled cost, so modeled-vs-measured residuals fall out of a trace:
+    from repro.core.planner import explain
+    info = explain(plan(A_c, B_c, M_c))
+    print("plan explain: elected", info["elected"], "| modeled ms:",
+          {k: round(v, 4) for k, v in info["costs_ms"].items()})
+    print("exec residuals:", obs.export.residual_summary(spans))
+
+    # export the capture for chrome://tracing / https://ui.perfetto.dev
+    # (obs.save_chrome_trace(path, spans) writes the same JSON to disk),
+    # or stream spans to rotating JSONL with obs.JsonlSpanSink(path):
+    print("perfetto events:", len(obs.chrome_trace(spans)["traceEvents"]))
+
+    # live exposition: any engine serves Prometheus text + health JSON
+    # from a daemon thread (also standalone: python -m repro.obs.serve)
+    import urllib.request
+    with QueryEngine(expose_port=0) as engine:     # 0 = ephemeral port
+        engine.serve([(A_c, B_c, M_c)])
+        with urllib.request.urlopen(
+                engine.obs_server.url + "/metrics", timeout=10) as resp:
+            families = obs.parse_prometheus(resp.read().decode())
+    print("scraped", len(families), "prometheus samples")
+
 
 if __name__ == "__main__":
     main()

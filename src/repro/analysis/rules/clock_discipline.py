@@ -7,8 +7,13 @@ replays to a bit-identical bucket schedule.  One stray wall-clock read
 re-introduces timing nondeterminism that only shows up as a divergent
 replay digest.
 
-Flags, in any file under a ``serving/`` directory except ``clock.py``
-(the one module allowed to touch real time):
+Flags, in any file under a ``serving/`` or ``obs/`` directory except
+``clock.py`` (the one module allowed to touch real time).  ``repro.obs``
+is covered because its spans measure wall durations INSIDE the request
+lifecycle: every ``perf_counter`` read there is a measurement site and
+must carry the same ``# lint: clock-ok(reason)`` annotation — and a
+``time.sleep`` or scheduling-from-wall-time bug in a span would perturb
+exactly the replay determinism this rule protects.
 
 * ``time.time`` / ``time.monotonic`` / ``time.sleep`` — always an error,
   annotations included: scheduling from wall time or real sleeps cannot
@@ -35,12 +40,13 @@ class ClockDisciplineRule(Rule):
     name = "clock-discipline"
     escape = "clock-ok"
     severity = "error"
-    description = ("serving code reads the injectable engine clock; "
+    description = ("serving + obs code reads the injectable engine clock; "
                    "wall-clock time only in clock.py or at annotated "
                    "measurement sites")
 
     def applies_to(self, mod) -> bool:
-        return mod.in_dir("serving") and mod.basename not in EXEMPT_BASENAMES
+        return ((mod.in_dir("serving") or mod.in_dir("obs"))
+                and mod.basename not in EXEMPT_BASENAMES)
 
     def check(self, mod, table) -> Iterator[Site]:
         time_aliases = {alias for alias, full in mod.imports.items()
@@ -66,14 +72,14 @@ class ClockDisciplineRule(Rule):
     def _site(self, mod, node, attr: str) -> Iterator[Site]:
         if attr in FORBIDDEN:
             yield self.at(node, (
-                f"`time.{attr}` in serving code: scheduling must read the "
+                f"`time.{attr}` in serving/obs code: scheduling must read the "
                 f"injectable engine clock (`clock.now()` / "
                 f"`clock.wait_on`) or move into serving/clock.py — replay "
                 f"determinism (PR 6) breaks otherwise; no annotation "
                 f"exempts this"), escapable=False)
         elif attr in ANNOTATABLE:
             yield self.at(node, (
-                f"unannotated `time.{attr}` in serving code: if this is a "
+                f"unannotated `time.{attr}` in serving/obs code: if this is a "
                 f"duration measurement (not a scheduling decision), "
                 f"annotate `# lint: clock-ok(reason)`; scheduling must use "
                 f"the engine clock"))

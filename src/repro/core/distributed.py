@@ -46,6 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import caches
+from repro import obs
 from repro.compat import shard_map
 
 from .formats import CSR, PaddedCSR, bcsr_row_panels, padded_from_csr
@@ -549,9 +550,11 @@ def distributed_masked_spgemm(A: CSR, B: CSR, M: CSR, mesh: Mesh, *,
             row_algorithm = dplan.row_algorithm
 
     if algorithm == "ring":
-        return ring_sparse_masked_spgemm(
-            A, B, M, mesh, axis=axis, block_size=block_size,
-            backend=backend, interpret=interpret)
+        with obs.span("spgemm.dist", route="ring", p=p,
+                      block=block_size or 0):
+            return ring_sparse_masked_spgemm(
+                A, B, M, mesh, axis=axis, block_size=block_size,
+                backend=backend, interpret=interpret)
 
     # row-parallel: replicate B, shard A/M rows, run the row kernels
     if row_algorithm is None:
@@ -561,16 +564,19 @@ def distributed_masked_spgemm(A: CSR, B: CSR, M: CSR, mesh: Mesh, *,
         dec = decide(stats, allow_tile=False)
         row_algorithm = dec.algorithm
     m, n = M.shape
-    if row_algorithm == "inner":
-        B_p = padded_from_csr(B.transpose())
-    else:
-        B_p = padded_from_csr(B)
-    A_p = padded_from_csr(A)
-    M_p = padded_from_csr(M)
-    A_p, M_p = pad_rows_to(p, A_p, M_p)
-    vals, present = row_parallel_masked_spgemm(
-        A_p, B_p, M_p, mesh, algorithm=row_algorithm, semiring=semiring,
-        complement=complement, axes=(axis,))
+    with obs.span("spgemm.dist", route="row", p=p,
+                  algorithm=row_algorithm):
+        with obs.span("spgemm.host_prep", algorithm=row_algorithm):
+            if row_algorithm == "inner":
+                B_p = padded_from_csr(B.transpose())
+            else:
+                B_p = padded_from_csr(B)
+            A_p = padded_from_csr(A)
+            M_p = padded_from_csr(M)
+            A_p, M_p = pad_rows_to(p, A_p, M_p)
+        vals, present = row_parallel_masked_spgemm(
+            A_p, B_p, M_p, mesh, algorithm=row_algorithm,
+            semiring=semiring, complement=complement, axes=(axis,))
     return MaskedSpGEMMResult(vals[:m], present[:m], M_p.cols[:m], (m, n))
 
 

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from . import accumulators as acc
 from .formats import (CSR, PaddedCSR, padded_from_csr, csr_from_coo,
                       bcsr_from_csr, bcsr_block_positions, _expand_rows)
@@ -178,13 +180,16 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
             raise NotImplementedError("tile route needs host CSR operands")
         return _masked_spgemm_tile(A, B, M, block_size=tile_block, wm=wm)
 
-    A_p = A if isinstance(A, PaddedCSR) else padded_from_csr(A, wa)
-    M_p = M if isinstance(M, PaddedCSR) else padded_from_csr(M, wm)
-    if algorithm == "inner":
-        Bt = B.transpose() if isinstance(B, CSR) else B
-        B_p = Bt if isinstance(Bt, PaddedCSR) else padded_from_csr(Bt, wb)
-    else:
-        B_p = B if isinstance(B, PaddedCSR) else padded_from_csr(B, wb)
+    with obs.span("spgemm.host_prep", algorithm=algorithm):
+        A_p = A if isinstance(A, PaddedCSR) else padded_from_csr(A, wa)
+        M_p = M if isinstance(M, PaddedCSR) else padded_from_csr(M, wm)
+        if algorithm == "inner":
+            Bt = B.transpose() if isinstance(B, CSR) else B
+            B_p = (Bt if isinstance(Bt, PaddedCSR)
+                   else padded_from_csr(Bt, wb))
+        else:
+            B_p = (B if isinstance(B, PaddedCSR)
+                   else padded_from_csr(B, wb))
 
     if two_phase:
         # symbolic pass: exact output structure (counts); in this padded
@@ -198,9 +203,11 @@ def masked_spgemm(A, B, M, *, algorithm: str = "auto",
         counts = symbolic_phase(A_p, M_p, B_sym, shape=(m, n), kdim=k)
         _ = counts.block_until_ready()
 
-    vals, present = _masked_spgemm_padded(
-        M_p, A_p, B_p, algorithm=algorithm, sr=semiring,
-        complement=complement, n_inspect=n_inspect, shape=(m, n), kdim=k)
+    with obs.span("spgemm.row", algorithm=algorithm, m=m, n=n):
+        vals, present = _masked_spgemm_padded(
+            M_p, A_p, B_p, algorithm=algorithm, sr=semiring,
+            complement=complement, n_inspect=n_inspect, shape=(m, n),
+            kdim=k)
     if complement:
         return vals, present
     return MaskedSpGEMMResult(vals, present, M_p.cols, (m, n))
@@ -261,20 +268,24 @@ def _masked_spgemm_tile(A: CSR, B: CSR, M: CSR, *,
         from .planner import ring_block_candidates
         block_size = ring_block_candidates(m, k, n)[0]
     bs = block_size
-    Ab = bcsr_from_csr(A, bs)
-    Bb = bcsr_from_csr(B, bs)
-    Mb = bcsr_from_csr(M, bs)
+    with obs.span("spgemm.tile", block=bs, m=m, n=n):
+        with obs.span("spgemm.host_prep", algorithm="tile"):
+            Ab = bcsr_from_csr(A, bs)
+            Bb = bcsr_from_csr(B, bs)
+            Mb = bcsr_from_csr(M, bs)
 
-    def pattern(x: CSR):
-        """Stored-entry pattern blocks: 1.0 per CSR entry (an explicitly
-        stored 0.0 is structural to the row kernels)."""
-        ones = CSR(x.indptr, x.indices, np.ones(x.nnz, np.float32), x.shape)
-        return bcsr_from_csr(ones, bs).blocks
+            def pattern(x: CSR):
+                """Stored-entry pattern blocks: 1.0 per CSR entry (an
+                explicitly stored 0.0 is structural to the row kernels)."""
+                ones = CSR(x.indptr, x.indices,
+                           np.ones(x.nnz, np.float32), x.shape)
+                return bcsr_from_csr(ones, bs).blocks
 
-    Cb, Sb = block_spgemm_with_structure(
-        Ab, Bb, Mb, a_pattern=pattern(A), b_pattern=pattern(B),
-        interpret=interpret, backend=backend)
-    return gather_mask_aligned(M, Mb, Cb.blocks, Sb.blocks, n=n, wm=wm)
+            a_pat, b_pat = pattern(A), pattern(B)
+        Cb, Sb = block_spgemm_with_structure(
+            Ab, Bb, Mb, a_pattern=a_pat, b_pattern=b_pat,
+            interpret=interpret, backend=backend)
+        return gather_mask_aligned(M, Mb, Cb.blocks, Sb.blocks, n=n, wm=wm)
 
 
 def gather_mask_aligned(M: CSR, Mb_struct, c_blocks, s_blocks, *, n: int,

@@ -48,6 +48,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import caches
+from repro import obs
 from repro.tuning import profile as tuning_profile
 
 from . import accumulators as acc
@@ -712,8 +713,18 @@ def plan(A, B, M, *, complement: bool = False,
             p = _refine_with_trial(A, B, M, p, semiring)
         return p
 
+    def traced_build() -> Plan:
+        # the cold path only: cache hits must stay span-free (they are
+        # the serving steady state and the disabled-cost contract's
+        # hottest call site)
+        with obs.span("plan.build") as sp:
+            p = build()
+            if obs.enabled():
+                sp.set(algorithm=p.algorithm, explain=explain_cached(p))
+        return p
+
     if not use_cache:
-        return build()
+        return traced_build()
     key = (structure_signature(A), structure_signature(B),
            structure_signature(M), complement, semiring.name,
            cost_model_token())
@@ -727,7 +738,7 @@ def plan(A, B, M, *, complement: bool = False,
         hit = _cache.peek(key)
         if hit is not None:
             return hit
-        p = build()
+        p = traced_build()
         _cache_put(key, p)
     return p
 
@@ -763,6 +774,8 @@ def revalidate(old: Plan, A: CSR, B: CSR, M: CSR, *,
     (``survived=False``).
     """
     def cold() -> Tuple[Plan, bool]:
+        obs.event("plan.revalidate", survived=False,
+                  algorithm=old.algorithm)
         return (plan(A, B, M, complement=complement, semiring=semiring,
                      use_cache=use_cache), False)
 
@@ -820,7 +833,87 @@ def revalidate(old: Plan, A: CSR, B: CSR, M: CSR, *,
                structure_signature(M), complement, semiring.name,
                cost_model_token())
         _cache_put(key, kept)
+    obs.event("plan.revalidate", survived=True, algorithm=kept.algorithm)
     return kept, True
+
+
+def explain(p) -> Dict:
+    """Why the planner elected what it elected, as one JSON-safe record.
+
+    Works for both :class:`Plan` and :class:`DistPlan`.  Returns the
+    elected algorithm/route, every candidate's modeled cost (ms), the
+    per-candidate COST_FEATURES decomposition the linear model dotted
+    with its fitted constants (so a reader can recompute each cost from
+    the record), the driving statistics, and the ``cost_model_token()``
+    identifying the calibration the decision was made under.  Attached
+    to every ``plan.build`` span, this is what lets production traces
+    yield modeled-vs-measured residuals for ``repro.tune``.
+    """
+    s = p.stats
+    stats_d = {f.name: (getattr(s, f.name))
+               for f in dataclasses.fields(PlanStats)}
+    stats_d["compression"] = float(s.compression)
+    stats_d["mask_density"] = float(s.mask_density)
+    costs = {name: float(c) for name, c in p.costs}
+    scale = s.m / 1024.0
+    features: Dict[str, Dict[str, float]] = {}
+    for name in costs:
+        if name in acc.COST_FEATURES:
+            feats = acc.COST_FEATURES[name](
+                n=s.n, wa=s.wa, wb=s.wb, wbt=s.wbt, pm=s.pm)
+            features[name] = {k: float(v) for k, v in feats.items()}
+    out: Dict = {
+        "costs_ms": costs,
+        "cost_scale_rows": float(scale),
+        "features": features,
+        "stats": stats_d,
+        "cost_model_token": cost_model_token(),
+    }
+    if isinstance(p, DistPlan):
+        out["elected"] = p.route
+        out["route"] = p.route
+        out["p"] = p.p
+        out["row_algorithm"] = p.row_algorithm
+        if p.tile_block:
+            tile_f, comm_f = ring_cost_features(s, p.p, p.tile_block)
+            features["ring"] = {
+                **{k: float(v) for k, v in tile_f.items()},
+                **{k: float(v) for k, v in comm_f.items()}}
+        out["elected_cost_ms"] = costs.get(p.route)
+    else:
+        out["elected"] = p.algorithm
+        out["algorithm"] = p.algorithm
+        out["widths"] = list(p.widths)
+        out["two_phase"] = p.two_phase
+        out["tile"] = {"eligible": p.tile_eligible,
+                       "block": p.tile_block}
+        out["trialed"] = list(p.trialed)
+        if "tile" in costs and p.tile_block:
+            features["tile"] = {
+                k: float(v)
+                for k, v in tile_cost_features(s, p.tile_block).items()}
+        out["elected_cost_ms"] = costs.get(p.algorithm)
+    return out
+
+
+#: memo for per-bucket span attachment — explain() costs ~100us (feature
+#: recomputation), far above the ~5us span budget, and serving re-emits
+#: it on every bucket execution of the same immutable plan
+_explain_memo = caches.LRUCache("planner-explain", 256)
+
+
+def explain_cached(p) -> Dict:
+    """Memoized :func:`explain` keyed by plan identity.  Safe because
+    plans are frozen and the memo entry pins the plan object (its id
+    cannot be recycled while the record is servable); the cost-model
+    token cannot drift under a live plan — re-planning on token change
+    produces a fresh object."""
+    hit = _explain_memo.get(id(p))
+    if hit is not None and hit[0] is p:
+        return hit[1]
+    info = explain(p)
+    _explain_memo.put(id(p), (p, info))
+    return info
 
 
 def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,

@@ -1,0 +1,41 @@
+"""repro.obs — structured tracing + exposition for the serving stack.
+
+Usage sketch (quickstart §12 walks the full loop)::
+
+    from repro import obs
+    obs.configure()                      # in-memory ring; off by default
+    eng = QueryEngine(expose_port=0)     # /metrics + /health
+    ... serve ...
+    spans = obs.current_spans()
+    obs.export.save_chrome_trace("trace.json", spans)   # Perfetto
+    obs.disable()
+
+Span sites cost one global read + one branch while tracing is off, and
+spans never feed scheduling or deterministic counters — enabling them
+cannot change ``deterministic_snapshot()`` (pinned by
+``benchmarks/bench_obs.py`` and the CI ``obs-smoke`` job).
+"""
+from . import export, sinks  # noqa: F401  (re-exported submodules)
+from .exposition import parse_prometheus, render_prometheus
+from .export import chrome_trace, residuals, save_chrome_trace
+from .sinks import InMemorySink, JsonlSpanSink, load_spans
+from .spans import (
+    Tracer,
+    configure,
+    current_spans,
+    disable,
+    enabled,
+    event,
+    get_tracer,
+    new_trace,
+    span,
+    tracing,
+)
+
+__all__ = [
+    "InMemorySink", "JsonlSpanSink", "Tracer", "chrome_trace",
+    "configure", "current_spans", "disable", "enabled", "event",
+    "export", "get_tracer", "load_spans", "new_trace",
+    "parse_prometheus", "render_prometheus", "residuals",
+    "save_chrome_trace", "sinks", "span", "tracing",
+]

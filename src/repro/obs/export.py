@@ -1,0 +1,104 @@
+"""Trace exports: Chrome trace-event / Perfetto JSON and residuals.
+
+``chrome_trace`` turns captured span records into the Trace Event
+Format both ``chrome://tracing`` and https://ui.perfetto.dev open
+directly: complete ("ph": "X") events with microsecond timestamps
+normalized to the earliest span, one row per emitting thread.
+
+``residuals`` closes the paper's modeled-vs-measured loop: exec spans
+carry the planner's modeled cost (``modeled_ms`` from
+``planner.explain``), so a capture yields per-algorithm residual
+factors that ``repro.tune`` can fold into the next calibration.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+__all__ = ["chrome_trace", "residual_summary", "residuals",
+           "save_chrome_trace"]
+
+
+def _json_safe(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {str(k): _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    return repr(v)
+
+
+def chrome_trace(spans: List[Dict]) -> Dict:
+    """Render span records as a Chrome trace-event JSON object."""
+    if spans:
+        t_base = min(s.get("t0", 0.0) for s in spans)
+    else:
+        t_base = 0.0
+    events = []
+    for s in spans:
+        args = dict(s.get("attrs") or {})
+        if s.get("trace") is not None:
+            args["trace_id"] = s["trace"]
+        if s.get("parent") is not None:
+            args["parent_span"] = s["parent"]
+        if s.get("error"):
+            args["error"] = s["error"]
+        events.append({
+            "name": s.get("name", "?"),
+            "cat": str(s.get("name", "?")).split(".", 1)[0],
+            "ph": "X",
+            "ts": (s.get("t0", 0.0) - t_base) * 1e6,
+            "dur": max(s.get("dur", 0.0), 0.0) * 1e6,
+            "pid": 1,
+            "tid": s.get("tid", 0),
+            "args": _json_safe(args),
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def save_chrome_trace(path, spans: List[Dict]) -> Dict:
+    """Write a Perfetto-openable trace JSON; returns the object."""
+    obj = chrome_trace(spans)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(obj, fh)
+    return obj
+
+
+def residuals(spans: List[Dict],
+              *, span_name: str = "serve.exec") -> List[Dict]:
+    """Modeled-vs-measured cost residuals from exec spans.
+
+    Returns one record per exec span that carried a modeled cost:
+    ``{"algorithm", "modeled_ms", "measured_ms", "residual"}`` where
+    ``residual = measured / modeled`` (1.0 = perfectly calibrated).
+    Feed the aggregate back to ``repro.tune`` as a correction factor.
+    """
+    out = []
+    for s in spans:
+        if s.get("name") != span_name:
+            continue
+        attrs = s.get("attrs") or {}
+        modeled = attrs.get("modeled_ms")
+        if not modeled:
+            continue
+        measured = s.get("dur", 0.0) * 1e3
+        out.append({
+            "algorithm": attrs.get("algorithm"),
+            "route": attrs.get("route"),
+            "modeled_ms": float(modeled),
+            "measured_ms": measured,
+            "residual": measured / float(modeled),
+        })
+    return out
+
+
+def residual_summary(spans: List[Dict]) -> Dict[str, Dict]:
+    """Per-algorithm residual aggregate: count / mean residual."""
+    per: Dict[Optional[str], List[float]] = {}
+    for r in residuals(spans):
+        per.setdefault(r["algorithm"], []).append(r["residual"])
+    return {
+        str(alg): {"count": len(v), "mean_residual": sum(v) / len(v)}
+        for alg, v in per.items()
+    }

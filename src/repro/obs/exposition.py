@@ -1,0 +1,183 @@
+"""Prometheus text exposition for the serving stack.
+
+``render_prometheus`` flattens three sources into the text format every
+Prometheus-compatible scraper ingests (version 0.0.4):
+
+* ``ServeMetrics.snapshot()`` — counters and latency percentiles as
+  ``repro_serve_*`` gauges/counters;
+* ``repro.caches.cache_info()`` — the process cache registry as
+  ``repro_cache_*{cache="..."}`` families (the ROADMAP serving-fabric
+  requirement);
+* the active tracer's in-memory span ring — per-phase duration
+  histograms (``repro_span_duration_seconds{phase="serve.exec"}``) with
+  cumulative buckets, ``_sum`` and ``_count``.
+
+``parse_prometheus`` is the matching reader used by tests and the CI
+``obs-smoke`` job to assert the exposition round-trips.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_prometheus", "render_prometheus", "HISTOGRAM_BUCKETS"]
+
+#: cumulative upper bounds (seconds) for span-duration histograms —
+#: microseconds through ~16s, the serving stack's realistic span range
+HISTOGRAM_BUCKETS = (1e-6, 1e-5, 1e-4, 1e-3, 4e-3, 1.6e-2, 6.4e-2,
+                     0.25, 1.0, 4.0, 16.0)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    return repr(float(v))
+
+
+def _escape(v: str) -> str:
+    return str(v).replace("\\", "\\\\").replace('"', '\\"') \
+                 .replace("\n", "\\n")
+
+
+class _Writer:
+    def __init__(self):
+        self.lines: List[str] = []
+        self._typed = set()
+
+    def sample(self, name: str, value, labels: Optional[Dict] = None,
+               *, kind: str = "gauge", help_text: str = "") -> None:
+        if name not in self._typed:
+            self._typed.add(name)
+            if help_text:
+                self.lines.append(f"# HELP {name} {help_text}")
+            self.lines.append(f"# TYPE {name} {kind}")
+        lab = ""
+        if labels:
+            inner = ",".join(f'{k}="{_escape(v)}"'
+                             for k, v in sorted(labels.items()))
+            lab = "{" + inner + "}"
+        self.lines.append(f"{name}{lab} {_fmt(value)}")
+
+    def render(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def _serve_section(w: _Writer, engine) -> None:
+    snap = engine.metrics.snapshot()
+    counters = {"submitted", "completed", "failed", "result_cache_hits",
+                "buckets_executed", "batched_requests", "merged_groups",
+                "delta_applied", "plans_revalidated", "lanes_patched",
+                "rows_invalidated"}
+    for key, val in snap.items():
+        if not isinstance(val, (int, float)):
+            continue
+        if key in counters:
+            w.sample(f"repro_serve_{key}_total", val, kind="counter",
+                     help_text=f"ServeMetrics.{key}")
+        else:
+            w.sample(f"repro_serve_{key}", val,
+                     help_text=f"ServeMetrics snapshot {key}")
+    w.sample("repro_serve_queue_depth", engine._pending(),
+             help_text="Requests admitted but not yet served")
+
+
+def _cache_section(w: _Writer) -> None:
+    from repro import caches
+    for name, info in sorted(caches.cache_info().items()):
+        labels = {"cache": name}
+        w.sample("repro_cache_size", info.get("size", 0), labels,
+                 help_text="Entries currently held")
+        w.sample("repro_cache_capacity", info.get("capacity", 0), labels,
+                 help_text="Configured LRU capacity")
+        w.sample("repro_cache_hits_total", info.get("hits", 0), labels,
+                 kind="counter", help_text="Registry cache hits")
+        w.sample("repro_cache_misses_total", info.get("misses", 0), labels,
+                 kind="counter", help_text="Registry cache misses")
+
+
+def _span_section(w: _Writer, tracer) -> None:
+    spans_fn = getattr(tracer.sink, "spans", None)
+    if not callable(spans_fn):
+        return
+    per_phase: Dict[str, List[float]] = {}
+    for rec in spans_fn():
+        per_phase.setdefault(rec.get("name", "?"), []).append(
+            max(rec.get("dur", 0.0), 0.0))
+    name = "repro_span_duration_seconds"
+    for phase, durs in sorted(per_phase.items()):
+        for le in HISTOGRAM_BUCKETS:
+            count = sum(1 for d in durs if d <= le)
+            w.sample(f"{name}_bucket", count,
+                     {"phase": phase, "le": repr(le)}, kind="histogram",
+                     help_text="Span durations by phase (ring window)")
+        w.sample(f"{name}_bucket", len(durs),
+                 {"phase": phase, "le": "+Inf"}, kind="histogram")
+        w.sample(f"{name}_sum", sum(durs), {"phase": phase},
+                 kind="histogram")
+        w.sample(f"{name}_count", len(durs), {"phase": phase},
+                 kind="histogram")
+
+
+def render_prometheus(engine=None, tracer=None) -> str:
+    """Render the full exposition.  ``engine=None`` skips the serve
+    section; ``tracer=None`` uses the globally-configured tracer (and
+    skips span histograms when tracing is off)."""
+    from . import spans as _spans
+    w = _Writer()
+    if engine is not None:
+        _serve_section(w, engine)
+    _cache_section(w)
+    if tracer is None:
+        tracer = _spans.get_tracer()
+    if tracer is not None:
+        _span_section(w, tracer)
+    return w.render()
+
+
+def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple], float]:
+    """Strict-enough parser for the exposition this module renders:
+    maps ``(metric_name, sorted_label_items)`` to the sample value.
+    Raises ``ValueError`` on a malformed sample line — the CI smoke
+    job's "does it parse" assertion."""
+    out: Dict[Tuple[str, Tuple], float] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        head, _, value = line.rpartition(" ")
+        if not head:
+            raise ValueError(f"malformed sample line: {raw!r}")
+        labels: Tuple = ()
+        name = head
+        if head.endswith("}"):
+            name, _, rest = head.partition("{")
+            body = rest[:-1]
+            items = []
+            for pair in _split_labels(body):
+                k, _, v = pair.partition("=")
+                if not (v.startswith('"') and v.endswith('"')):
+                    raise ValueError(f"malformed label in: {raw!r}")
+                items.append((k, v[1:-1]))
+            labels = tuple(sorted(items))
+        if not name.replace("_", "").replace(":", "").isalnum():
+            raise ValueError(f"malformed metric name in: {raw!r}")
+        out[(name, labels)] = float(value)
+    return out
+
+
+def _split_labels(body: str) -> List[str]:
+    """Split ``k="v",k2="v2"`` on commas outside quotes."""
+    parts, cur, in_q, prev = [], [], False, ""
+    for ch in body:
+        if ch == '"' and prev != "\\":
+            in_q = not in_q
+        if ch == "," and not in_q:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+        prev = ch
+    if cur:
+        parts.append("".join(cur))
+    return parts

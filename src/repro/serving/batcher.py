@@ -51,6 +51,9 @@ class Request:
     #: breaks trace-replay determinism (PR 6) the day someone relies on it
     submitted_at: float
     key: Optional[tuple] = None       # precomputed bucket key (engine)
+    #: repro.obs per-request trace id (None while tracing is disabled) —
+    #: carried so bucket-level spans can name their member requests
+    trace_id: Optional[int] = None
 
 
 def mesh_key(mesh, axis: str) -> Optional[tuple]:

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import caches
+from repro import obs
 from repro.core.formats import CSR, _expand_rows, padded_from_csr
 from repro.core.masked_spgemm import MaskedSpGEMMResult
 from repro.core.planner import structure_signature
@@ -276,13 +277,14 @@ class BurstProgram:
         ``nnz_a`` (the sentinel points AT it), and the sentinel keeps
         landing on a zero, so padding cannot change any fold value.
         """
-        q = _padded_nnz(self.nnz_a)
-        stack = np.zeros((len(As), q), np.float32)
-        for i, a in enumerate(As):
-            stack[i, :self.nnz_a] = a.data
-        vals = self._fn(jnp.asarray(stack), self._IAj, self._BVj,
-                        self.present)
-        vals.block_until_ready()
+        with obs.span("burst.run", size=len(As)):
+            q = _padded_nnz(self.nnz_a)
+            stack = np.zeros((len(As), q), np.float32)
+            for i, a in enumerate(As):
+                stack[i, :self.nnz_a] = a.data
+            vals = self._fn(jnp.asarray(stack), self._IAj, self._BVj,
+                            self.present)
+            vals.block_until_ready()
         return [MaskedSpGEMMResult(vals[i], self.present, self.mask_cols,
                                    self.shape)
                 for i in range(len(As))]
@@ -499,12 +501,15 @@ def get_program(A: CSR, B: CSR, M: CSR, semiring: Semiring,
         return hit
     lin = _lineage.get(key)  # lint: plan-key-ok(structure-pure program)
     if lin is not None:
-        got = lin[0].patched(A, B, M, lin[1])
-        if got is not None:
-            _patches.put(key, got[0])  # lint: plan-key-ok(structure-pure)
-            return got[0]
+        with obs.span("burst.patch", source="lineage") as sp:
+            got = lin[0].patched(A, B, M, lin[1])
+            if got is not None:
+                sp.set(lanes=got[1])
+                _patches.put(key, got[0])  # lint: plan-key-ok(structure-pure)
+                return got[0]
     try:
-        prog = BurstProgram(A, B, M, semiring, wm)
+        with obs.span("burst.compile", nnz_a=A.nnz, nnz_m=M.nnz):
+            prog = BurstProgram(A, B, M, semiring, wm)
     except _TooLarge:
         _programs.put(key, _OVER_CAP)  # lint: plan-key-ok(structure-pure)
         return None
@@ -531,10 +536,12 @@ def patch_program(old: BurstProgram, A: CSR, B: CSR, M: CSR,
     hit = _programs.peek(key)  # lint: plan-key-ok(structure-pure program)
     if hit is not None and hit is not _OVER_CAP:
         return hit, 0
-    got = old.patched(A, B, M, changed_rows)
-    if got is None:
-        return None, 0
-    prog, lanes = got
+    with obs.span("burst.patch", source="delta") as sp:
+        got = old.patched(A, B, M, changed_rows)
+        if got is None:
+            return None, 0
+        prog, lanes = got
+        sp.set(lanes=lanes)
     _patches.put(key, prog)  # lint: plan-key-ok(structure-pure program)
     return prog, lanes
 

@@ -20,6 +20,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro import caches
+from repro import obs
 from repro.core.formats import CSR, PaddedCSR
 from repro.core.planner import structure_signature
 
@@ -154,6 +155,9 @@ class ResultCache:
         for k in hit:
             if self._lru.pop(k) is not None:
                 evicted += 1
+        obs.event("cache.invalidate", cache=self.name,
+                  tagged=len(hit), evicted=evicted,
+                  scoped=rows_bitmap is not None)
         return evicted
 
     def _maybe_prune_locked(self) -> None:

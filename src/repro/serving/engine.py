@@ -39,6 +39,7 @@ import numpy as np
 import jax
 
 from repro import caches
+from repro import obs
 from repro.core.formats import CSR, CSRDelta, apply_csr_delta, tril
 from repro.core.masked_spgemm import masked_spgemm, masked_spgemm_batched
 from repro.core import planner
@@ -130,7 +131,8 @@ class QueryEngine:
                  merge_same_shape: bool = True, pad_factor: float = 4.0,
                  result_cache: Optional[ResultCache] = None,
                  cache_results: bool = True, use_burst: bool = True,
-                 clock=None, recorder=None):
+                 clock=None, recorder=None,
+                 expose_port: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if queue_cap < max_batch:
@@ -179,12 +181,21 @@ class QueryEngine:
                                             name="repro-serve-worker",
                                             daemon=True)
             self._worker.start()
+        #: /metrics + /health exposition (``repro.obs.serve``); port 0
+        #: binds an ephemeral port — read ``engine.obs_server.port``
+        self.obs_server = None
+        if expose_port is not None:
+            from repro.obs.serve import start_server
+            self.obs_server = start_server(self, port=expose_port)
 
     # -- lifecycle ----------------------------------------------------------
 
     def close(self) -> None:
         """Drain outstanding work, stop the worker, and drop the engine's
         own result cache from the process registry."""
+        if self.obs_server is not None:
+            self.obs_server.close()
+            self.obs_server = None
         self.flush()
         if self._worker is not None:
             with self._space:
@@ -218,6 +229,14 @@ class QueryEngine:
         ticket = Ticket(self)
         self.metrics.record_submit()
         submitted_at = self.clock.now()
+        # measurement, not scheduling: hit latency must be real elapsed
+        # time even under a frozen virtual clock
+        t_sub = time.perf_counter()  # lint: clock-ok(hit latency measurement)
+        trace_id = obs.new_trace()   # None while tracing is disabled
+        if trace_id is not None:
+            obs.event("serve.submit", trace=trace_id,
+                      shape=list(M.shape), complement=complement,
+                      algorithm=algorithm, mesh=mesh is not None)
         if self.recorder is not None:
             self.recorder.on_submit(A, B, M, t=submitted_at,
                                     semiring=semiring, complement=complement,
@@ -243,13 +262,18 @@ class QueryEngine:
                        planner.cost_model_token())
                 hit = self.results.get(key)
                 if hit is not None:
-                    self.metrics.record_cache_hit()
+                    hit_s = (time.perf_counter()  # lint: clock-ok(hit latency measurement)
+                             - t_sub)
+                    self.metrics.record_cache_hit(latency_s=hit_s)
+                    obs.event("serve.cache_hit", dur_s=hit_s,
+                              trace=trace_id)
                     ticket._complete(post(hit) if post is not None else hit)
                     return ticket
         req = Request(A=A, B=B, M=M, semiring=semiring,
                       complement=complement, algorithm=algorithm, mesh=mesh,
                       axis=axis, ticket=ticket, post=post, cache_key=key,
-                      key=bkey, submitted_at=submitted_at)
+                      key=bkey, submitted_at=submitted_at,
+                      trace_id=trace_id)
         self._admit(req)
         return ticket
 
@@ -324,31 +348,36 @@ class QueryEngine:
         changed: Dict[str, np.ndarray] = {}
         values_only = {"A": True, "B": True, "M": True}
         applied = 0
-        for name in ("A", "B", "M"):
-            d = deltas[name]
-            if d is None:
-                changed[name] = np.zeros(0, np.int64)
-                continue
-            isig = _delta_scratch.get(
-                ("isig", sig_old[name]))  # lint: plan-key-ok(isig memo)
-            res = apply_csr_delta(old_ops[name], d, old_signature=isig)
-            new_ops[name] = res.csr
-            changed[name] = res.changed_rows
-            values_only[name] = res.values_only
-            signatures[name] = res.signature
-            _delta_scratch.put(
-                ("isig", planner.structure_signature(res.csr)),
-                res.signature)  # lint: plan-key-ok(isig memo)
-            applied += 1
+        with obs.span("delta.apply") as sp:
+            for name in ("A", "B", "M"):
+                d = deltas[name]
+                if d is None:
+                    changed[name] = np.zeros(0, np.int64)
+                    continue
+                isig = _delta_scratch.get(
+                    ("isig", sig_old[name]))  # lint: plan-key-ok(isig memo)
+                res = apply_csr_delta(old_ops[name], d, old_signature=isig)
+                new_ops[name] = res.csr
+                changed[name] = res.changed_rows
+                values_only[name] = res.values_only
+                signatures[name] = res.signature
+                _delta_scratch.put(
+                    ("isig", planner.structure_signature(res.csr)),
+                    res.signature)  # lint: plan-key-ok(isig memo)
+                applied += 1
+            sp.set(applied=applied)
         A1, B1, M1 = new_ops["A"], new_ops["B"], new_ops["M"]
 
         # plan lifecycle: revalidate the pre-delta plan onto the post-delta
         # operands; a surviving plan is stamped under the post-delta cache
         # key inside revalidate(), so the serve path's plan() call hits
-        old_plan = planner.plan(A, B, M, complement=complement,
-                                semiring=semiring)
-        new_plan, survived = planner.revalidate(
-            old_plan, A1, B1, M1, complement=complement, semiring=semiring)
+        with obs.span("delta.revalidate") as sp:
+            old_plan = planner.plan(A, B, M, complement=complement,
+                                    semiring=semiring)
+            new_plan, survived = planner.revalidate(
+                old_plan, A1, B1, M1, complement=complement,
+                semiring=semiring)
+            sp.set(survived=survived, algorithm=new_plan.algorithm)
 
         # burst lifecycle: patch the compiled program's changed lane
         # columns instead of recompiling, when the delta is row-local on
@@ -359,28 +388,33 @@ class QueryEngine:
                 and values_only["B"]
                 and burst.burst_eligible(new_plan.algorithm, complement,
                                          A1, B1, M1)):
-            parent = burst.peek_program(A, B, M, semiring,
-                                        old_plan.widths[2])
-            if parent is not None:
-                prog, lanes = burst.patch_program(
-                    parent, A1, B1, M1, semiring, new_plan.widths[2],
-                    union)
-                if prog is not None:
-                    burst.record_lineage(A1, B1, M1, semiring,
-                                         new_plan.widths[2], parent, union)
+            with obs.span("delta.lane_patch") as sp:
+                parent = burst.peek_program(A, B, M, semiring,
+                                            old_plan.widths[2])
+                if parent is not None:
+                    prog, lanes = burst.patch_program(
+                        parent, A1, B1, M1, semiring, new_plan.widths[2],
+                        union)
+                    if prog is not None:
+                        burst.record_lineage(A1, B1, M1, semiring,
+                                             new_plan.widths[2], parent,
+                                             union)
+                sp.set(lanes=int(lanes), had_parent=parent is not None)
 
         # result-cache lifecycle: evict by (structure, row coverage) — a
         # B delta can affect every output row, so it is never row-scoped
         m_rows = A.shape[0]
         evicted = 0
-        if delta_a is not None:
-            evicted += self.results.invalidate(
-                sig_old["A"], row_bitmap(changed["A"], m_rows))
-        if delta_m is not None:
-            evicted += self.results.invalidate(
-                sig_old["M"], row_bitmap(changed["M"], m_rows))
-        if delta_b is not None:
-            evicted += self.results.invalidate(sig_old["B"], None)
+        with obs.span("delta.invalidate") as sp:
+            if delta_a is not None:
+                evicted += self.results.invalidate(
+                    sig_old["A"], row_bitmap(changed["A"], m_rows))
+            if delta_m is not None:
+                evicted += self.results.invalidate(
+                    sig_old["M"], row_bitmap(changed["M"], m_rows))
+            if delta_b is not None:
+                evicted += self.results.invalidate(sig_old["B"], None)
+            sp.set(evicted=int(evicted))
         rows = int(m_rows if delta_b is not None else len(union))
         self.metrics.record_delta(applied=applied,
                                   revalidated=int(survived),
@@ -571,6 +605,13 @@ class QueryEngine:
                     continue
                 planned.append(  # lint: clock-ok(plan duration)
                     ((bucket, plan), time.perf_counter() - t0))
+                if obs.enabled():
+                    # explain() is attached to every plan span so traces
+                    # carry modeled costs next to measured exec durations
+                    obs.event("serve.plan", dur_s=planned[-1][1],
+                              algorithm=plan.algorithm,
+                              explain=planner.explain_cached(plan),
+                              traces=[q.trace_id for q in bucket])
             elif r.mesh is None and r.algorithm != "tile":
                 forced_row.append(bucket)
             else:
@@ -626,6 +667,20 @@ class QueryEngine:
                 self._fail_bucket(reqs, e)
                 return
             exec_s = time.perf_counter() - t_exec  # lint: clock-ok(exec duration)
+        if obs.enabled():
+            traces = [r.trace_id for r in reqs]
+            # queue wait is a CLOCK duration (deterministic under replay):
+            # emitted with the engine-computed value, never re-measured
+            obs.event("serve.queue_wait", dur_s=queue_wait, traces=traces)
+            modeled = None
+            if plan is not None:
+                by_name = dict(plan.costs)
+                if algo in by_name:
+                    modeled = float(by_name[algo])
+            obs.event("serve.exec", dur_s=exec_s, route=route,
+                      algorithm=algo, size=len(reqs),
+                      merged_from=merged_from, modeled_ms=modeled,
+                      traces=traces)
         self.metrics.record_bucket(
             size=len(reqs), algorithm=algo, route=route,
             queue_wait_s=queue_wait, plan_s=plan_s, exec_s=exec_s,
@@ -647,6 +702,7 @@ class QueryEngine:
         cover = (row_bitmap(np.nonzero(np.diff(rep.M.indptr))[0],
                             rep.M.shape[0])
                  if cacheable and rep.cache_key is not None else 0)
+        cache_puts = 0
         for r, res in zip(reqs, results):
             if (cacheable and r.cache_key is not None
                     and r.cache_key[-1] == token):
@@ -654,6 +710,7 @@ class QueryEngine:
                     (r.cache_key[0][0], cover),
                     (r.cache_key[1][0], _FULL_COVERAGE),
                     (r.cache_key[2][0], cover)))
+                cache_puts += 1
             # a raising post callback must fail ONLY its own ticket — an
             # escaped exception here would strand the bucket's remaining
             # tickets and kill the async worker thread
@@ -664,6 +721,8 @@ class QueryEngine:
                 r.ticket._fail(e)
                 continue
             r.ticket._complete(value)
+        if cache_puts:
+            obs.event("serve.result_cache_put", count=cache_puts)
 
     def _run_distributed(self, reqs: List[Request]):
         """Mesh-carrying bucket: the distributed plan and the ring's host

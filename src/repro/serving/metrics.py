@@ -60,6 +60,8 @@ class ServeMetrics:
             self.rows_invalidated = 0
             self._bucket_log: deque = deque(maxlen=BUCKET_LOG_CAPACITY)
             self._latencies: deque = deque(maxlen=LATENCY_RESERVOIR_CAPACITY)
+            self._hit_latencies: deque = deque(
+                maxlen=LATENCY_RESERVOIR_CAPACITY)
 
     # -- recording ----------------------------------------------------------
 
@@ -67,10 +69,18 @@ class ServeMetrics:
         with self._lock:
             self.submitted += n
 
-    def record_cache_hit(self) -> None:
+    def record_cache_hit(self, latency_s: Optional[float] = None) -> None:
+        """One result-cache hit.  Hits complete without touching the
+        bucket path, so their (near-zero) latencies land in a dedicated
+        reservoir: folding them into the miss reservoir — or dropping
+        them, as this method did before — skews p50/p99 under high hit
+        rates.  ``snapshot()`` reports hit, miss, and combined
+        percentiles separately."""
         with self._lock:
             self.result_cache_hits += 1
             self.completed += 1
+            if latency_s is not None:
+                self._hit_latencies.append(float(latency_s))
 
     def record_failure(self, n: int = 1) -> None:
         with self._lock:
@@ -133,12 +143,23 @@ class ServeMetrics:
 
     def snapshot(self) -> Dict:
         with self._lock:
-            lat = list(self._latencies)
+            miss = list(self._latencies)
+            hit = list(self._hit_latencies)
+            lat = miss + hit
             done = self.buckets_executed
             return {
+                # combined = misses + recorded hits; the historic miss-only
+                # view stays available as miss_lat_* (hits used to be
+                # silently absent, inflating p50/p99 under high hit rates)
                 "lat_count": len(lat),
                 "lat_p50_s": self._percentile(lat, 50.0),
                 "lat_p99_s": self._percentile(lat, 99.0),
+                "miss_lat_count": len(miss),
+                "miss_lat_p50_s": self._percentile(miss, 50.0),
+                "miss_lat_p99_s": self._percentile(miss, 99.0),
+                "hit_lat_count": len(hit),
+                "hit_lat_p50_s": self._percentile(hit, 50.0),
+                "hit_lat_p99_s": self._percentile(hit, 99.0),
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,

@@ -322,7 +322,8 @@ class RotatingTraceSink:
 
     def __init__(self, path: str, *, max_bytes: int = 1 << 20,
                  rotate: int = 4, sample_rate: float = 1.0, seed: int = 0,
-                 name: str = "capture", meta: Optional[Dict] = None):
+                 name: str = "capture", meta: Optional[Dict] = None,
+                 kind: str = TRACE_KIND):
         if max_bytes < 1:
             raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         if rotate < 1:
@@ -336,6 +337,9 @@ class RotatingTraceSink:
         self.sample_rate = float(sample_rate)
         self.name = name
         self.meta = dict(meta or {})
+        # header kind: request captures keep TRACE_KIND; repro.obs span
+        # captures stamp their own so loaders can't confuse the families
+        self.kind = str(kind)
         self.written = 0        # events persisted (all segments)
         self.sampled_out = 0    # events dropped by the sampler
         self._rng = np.random.default_rng(seed)
@@ -347,7 +351,7 @@ class RotatingTraceSink:
 
     def _header(self) -> str:
         # NO "requests" field: the segment is still streaming
-        return json.dumps({"schema": SCHEMA_VERSION, "kind": TRACE_KIND,
+        return json.dumps({"schema": SCHEMA_VERSION, "kind": self.kind,
                            "name": self.name, "meta": self.meta},
                           sort_keys=True) + "\n"
 

@@ -1,0 +1,15 @@
+"""Clock-discipline cases in an obs/ module (covered since PR 9)."""
+import time
+
+
+def span_duration():
+    t0 = time.perf_counter()  # lint: clock-ok(span duration measurement)
+    return t0
+
+
+def unannotated_stamp():
+    return time.perf_counter()                   # finding (line 11)
+
+
+def bad_flush():
+    time.sleep(0.01)  # lint: clock-ok(fires anyway, l15)

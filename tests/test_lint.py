@@ -57,21 +57,26 @@ def test_no_densify_fixture():
 def test_clock_discipline_fixture():
     findings = _run("clock", "clock-discipline")
     assert _sites(findings, "clock-discipline") == [
+        ("obs/spans.py", 11),       # unannotated perf_counter in obs/
+        ("obs/spans.py", 15),       # time.sleep — fires even annotated
         ("serving/sched.py", 3),    # from time import monotonic
         ("serving/sched.py", 9),    # time.monotonic — fires even annotated
         ("serving/sched.py", 13),   # time.sleep
         ("serving/sched.py", 17),   # bare monotonic() use
         ("serving/sched.py", 23),   # unannotated perf_counter
     ]
-    # clock.py is exempt; the annotated perf_counter (line 21) is silent
+    # clock.py is exempt; the annotated perf_counter sites (serving line
+    # 21, obs line 6) are silent
     assert not [f for f in findings if f.path == "serving/clock.py"]
+    assert ("obs/spans.py", 6) not in _sites(findings, "clock-discipline")
 
 
 def test_clock_forbidden_calls_are_not_escapable():
     # line 9 carries `# lint: clock-ok(...)` and STILL fires: wall-clock
-    # scheduling accepts no annotation
+    # scheduling accepts no annotation (in obs/ either — spans.py line 15)
     findings = _run("clock", "clock-discipline")
     assert ("serving/sched.py", 9) in _sites(findings, "clock-discipline")
+    assert ("obs/spans.py", 15) in _sites(findings, "clock-discipline")
 
 
 def test_cache_registry_fixture():

@@ -1,0 +1,434 @@
+"""Observability layer (PR 9): spans, sinks, explain, exposition, HTTP.
+
+The contracts under test:
+
+* span sites cost one branch when tracing is off, and spans NEVER feed
+  scheduling — a traced engine produces the same
+  ``deterministic_snapshot()`` as an untraced one;
+* span/trace ids are deterministic counters (replay-stable), nesting
+  links parents, and the Chrome-trace export round-trips;
+* ``planner.explain`` decomposes every plan into its cost-feature
+  vector + per-candidate modeled costs (the repro.tune residual feed);
+* the Prometheus exposition round-trips through its own parser and the
+  stdlib HTTP endpoint serves it live.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.formats import CSR, erdos_renyi, er_mask
+from repro.core.planner import explain, plan
+from repro.obs.exposition import (HISTOGRAM_BUCKETS, parse_prometheus,
+                                  render_prometheus)
+from repro.obs.sinks import InMemorySink, JsonlSpanSink, load_spans
+from repro.obs.spans import _NULL_SPAN
+from repro.serving import QueryEngine
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends untraced (the process default)."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _operands(n=64, seed=0):
+    return (erdos_renyi(n, 3, seed=seed), erdos_renyi(n, 3, seed=seed + 1),
+            er_mask(n, 6, seed=seed + 2))
+
+
+def _revalue(x: CSR, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    return CSR(x.indptr, x.indices,
+               rng.uniform(0.5, 1.5, x.nnz).astype(np.float32), x.shape)
+
+
+# ---------------------------------------------------------------------------
+# spans: disabled cost, nesting, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_sites_are_null_and_shared():
+    assert not obs.enabled()
+    s = obs.span("anything", attr=1)
+    assert s is _NULL_SPAN and s is obs.span("other")
+    with s as inner:
+        inner.set(whatever=2)           # all no-ops
+    assert obs.event("x") is None
+    assert obs.new_trace() is None
+    assert obs.current_spans() == []
+
+
+def test_span_nesting_links_parents_and_traces():
+    with obs.tracing() as tr:
+        tid = obs.new_trace()
+        with obs.span("outer", trace=tid) as outer:
+            with obs.span("inner") as inner:
+                obs.event("leaf", dur_s=0.5)
+    recs = {r["name"]: r for r in tr.sink.spans()}
+    # exit order: inner closes first
+    assert [r["name"] for r in tr.sink.spans()] == ["leaf", "inner",
+                                                    "outer"]
+    assert recs["outer"]["parent"] is None
+    assert recs["inner"]["parent"] == outer.span_id
+    assert recs["leaf"]["parent"] == inner.span_id
+    # the trace id set on the outer span flows to everything nested
+    assert {recs[k]["trace"] for k in recs} == {tid}
+    assert recs["leaf"]["dur"] == 0.5
+
+
+def test_span_ids_are_deterministic_counters():
+    def capture():
+        with obs.tracing() as tr:
+            t1, t2 = obs.new_trace(), obs.new_trace()
+            with obs.span("a", trace=t1):
+                pass
+            with obs.span("b", trace=t2):
+                pass
+        return [(r["span"], r["trace"]) for r in tr.sink.spans()]
+
+    assert capture() == capture() == [(1, 1), (2, 2)]
+
+
+def test_span_records_error_and_attrs():
+    with obs.tracing() as tr:
+        with pytest.raises(RuntimeError):
+            with obs.span("boom", stage="setup") as sp:
+                sp.set(progress=3)
+                raise RuntimeError("x")
+    (rec,) = tr.sink.spans()
+    assert rec["error"] == "RuntimeError"
+    assert rec["attrs"] == {"stage": "setup", "progress": 3}
+    assert rec["dur"] >= 0.0
+
+
+def test_tracing_scope_restores_previous_tracer():
+    t_outer = obs.configure()
+    with obs.tracing() as t_inner:
+        assert obs.get_tracer() is t_inner is not t_outer
+    assert obs.get_tracer() is t_outer
+    obs.disable()
+    assert not obs.enabled()
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+
+def test_inmemory_sink_is_a_bounded_ring():
+    sink = InMemorySink(capacity=3)
+    with obs.tracing(sink):
+        for i in range(5):
+            obs.event(f"e{i}")
+    assert len(sink) == 3 and sink.emitted == 5
+    assert [r["name"] for r in sink.spans()] == ["e2", "e3", "e4"]
+    sink.clear()
+    assert len(sink) == 0 and sink.emitted == 5
+
+
+def test_jsonl_sink_roundtrips_and_rotates(tmp_path):
+    path = str(tmp_path / "spans.jsonl")
+    with JsonlSpanSink(path, max_bytes=512, rotate=16) as sink:
+        with obs.tracing(sink):
+            for i in range(24):
+                obs.event("serve.exec", dur_s=i * 1e-3, idx=i)
+    assert sink.written == 24
+    assert len(sink.segments()) >= 2                # rotation happened
+    # header lines carry the span kind, so loaders skip them
+    head = json.loads(open(path).readline())
+    assert head["kind"] == "repro-span-trace"
+    recs = load_spans(path, rotate=16)
+    assert len(recs) == 24                          # headers not counted
+    assert [r["attrs"]["idx"] for r in recs] == list(range(24))
+
+
+def test_jsonl_sink_seeded_sampling(tmp_path):
+    def run(fname, seed):
+        s = JsonlSpanSink(str(tmp_path / fname), sample_rate=0.5,
+                          seed=seed)
+        with obs.tracing(s):
+            for i in range(40):
+                obs.event("e", idx=i)
+        s.close()
+        return [r["attrs"]["idx"]
+                for r in load_spans(str(tmp_path / fname))]
+
+    a, b = run("a.jsonl", seed=5), run("b.jsonl", seed=5)
+    assert a == b and 0 < len(a) < 40
+    assert run("c.jsonl", seed=6) != a
+
+
+# ---------------------------------------------------------------------------
+# export: Chrome trace events + modeled-vs-measured residuals
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_export_shape():
+    with obs.tracing() as tr:
+        with obs.span("serve.exec", algorithm="msa"):
+            obs.event("spgemm.row", dur_s=1e-3)
+    doc = obs.chrome_trace(tr.sink.spans())
+    evs = doc["traceEvents"]
+    assert len(evs) == 2 and all(e["ph"] == "X" for e in evs)
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["spgemm.row"]["dur"] == pytest.approx(1e3)  # micros
+    assert by_name["serve.exec"]["args"]["algorithm"] == "msa"
+    assert by_name["serve.exec"]["cat"] == "serve"
+    assert min(e["ts"] for e in evs) == 0.0         # rebased to t_min
+    json.dumps(doc)                                 # serializable as-is
+
+
+def test_save_chrome_trace_writes_loadable_json(tmp_path):
+    with obs.tracing() as tr:
+        obs.event("x", dur_s=0.25)
+    p = tmp_path / "trace.json"
+    obs.save_chrome_trace(str(p), tr.sink.spans())
+    loaded = json.load(open(p))
+    assert len(loaded["traceEvents"]) == 1
+    assert loaded["displayTimeUnit"] == "ms"
+
+
+def test_residuals_pair_modeled_and_measured():
+    with obs.tracing() as tr:
+        obs.event("serve.exec", dur_s=2e-3, algorithm="msa", route="row",
+                  modeled_ms=1.0)
+        obs.event("serve.exec", dur_s=4e-3, algorithm="msa", route="row",
+                  modeled_ms=1.0)
+        obs.event("serve.exec", dur_s=1e-3, route="burst")  # no model
+    rows = obs.residuals(tr.sink.spans())
+    assert len(rows) == 2
+    assert rows[0]["residual"] == pytest.approx(2.0)
+    summary = obs.export.residual_summary(tr.sink.spans())
+    assert summary["msa"]["count"] == 2
+    assert summary["msa"]["mean_residual"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# planner.explain
+# ---------------------------------------------------------------------------
+
+
+def test_explain_decomposes_row_plan():
+    A, B, M = _operands()
+    info = explain(plan(A, B, M))
+    assert info["elected"] == info["algorithm"]
+    assert info["elected"] in info["costs_ms"]
+    assert info["elected_cost_ms"] == min(info["costs_ms"].values())
+    # every candidate cost decomposes into its feature vector
+    for algo, feats in info["features"].items():
+        assert algo in info["costs_ms"]
+        assert all(np.isfinite(v) for v in feats.values())
+    assert info["stats"]["n"] == 64
+    assert isinstance(info["cost_model_token"], str)
+    json.dumps(info)                                # span-attachable
+
+
+def test_explain_decomposes_dist_plan():
+    from repro.core.planner import plan_distributed
+    A, B, M = _operands(n=96)
+    info = explain(plan_distributed(A, B, M, 2))
+    assert info["route"] in ("row", "ring")
+    assert info["p"] == 2
+    assert set(info["costs_ms"]) >= {"row", "ring"}
+    json.dumps(info)
+
+
+def test_plan_build_span_carries_explain():
+    from repro.core.planner import clear_plan_cache
+    clear_plan_cache()
+    A, B, M = _operands(seed=11)
+    with obs.tracing() as tr:
+        p = plan(A, B, M)
+        plan(A, B, M)                       # cache hit: no second span
+    builds = [r for r in tr.sink.spans() if r["name"] == "plan.build"]
+    assert len(builds) == 1
+    ex = builds[0]["attrs"]["explain"]
+    assert ex["elected"] == p.algorithm
+    assert builds[0]["attrs"]["algorithm"] == p.algorithm
+
+
+# ---------------------------------------------------------------------------
+# exposition + HTTP endpoint
+# ---------------------------------------------------------------------------
+
+
+def test_render_parse_roundtrip_with_histograms():
+    with obs.tracing():
+        obs.event("serve.exec", dur_s=5e-4)
+        obs.event("serve.exec", dur_s=2e-2)
+        text = render_prometheus()
+    samples = parse_prometheus(text)
+    name = "repro_span_duration_seconds"
+    count = samples[(f"{name}_count", (("phase", "serve.exec"),))]
+    total = samples[(f"{name}_sum", (("phase", "serve.exec"),))]
+    inf = samples[(f"{name}_bucket",
+                   (("le", "+Inf"), ("phase", "serve.exec")))]
+    assert count == inf == 2.0
+    assert total == pytest.approx(5e-4 + 2e-2)
+    # buckets are cumulative (monotone in le)
+    counts = [samples[(f"{name}_bucket",
+                       (("le", repr(le)), ("phase", "serve.exec")))]
+              for le in HISTOGRAM_BUCKETS]
+    assert counts == sorted(counts) and counts[-1] == 2.0
+    # registry caches appear with labels
+    assert any(k[0] == "repro_cache_size" for k in samples)
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus("not a sample line at all with {\n")
+    with pytest.raises(ValueError):
+        parse_prometheus('metric{label=unquoted} 1\n')
+
+
+def test_http_endpoint_serves_metrics_and_health():
+    A, B, M = _operands()
+    with QueryEngine(expose_port=0) as engine:
+        engine.serve([(A, B, M)])
+        engine.serve([(A, B, M)])                   # result-cache hit
+        base = engine.obs_server.url
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            assert r.headers["Content-Type"].startswith("text/plain")
+            samples = parse_prometheus(r.read().decode())
+        with urllib.request.urlopen(f"{base}/health", timeout=10) as r:
+            health = json.loads(r.read().decode())
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{base}/nope", timeout=10)
+    assert samples[("repro_serve_completed_total", ())] == 2.0
+    assert samples[("repro_serve_result_cache_hits_total", ())] == 1.0
+    assert ("repro_serve_queue_depth", ()) in samples
+    assert health["status"] == "ok" and health["queue_depth"] == 0
+    assert health["completed"] == 2 and health["stopped"] is False
+
+
+def test_engine_close_shuts_exposition_down():
+    engine = QueryEngine(expose_port=0)
+    url = engine.obs_server.url
+    engine.close()
+    assert engine.obs_server is None
+    with pytest.raises(Exception):
+        urllib.request.urlopen(f"{url}/health", timeout=2)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: lifecycle spans + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_request_lifecycle_spans_cover_the_pipeline():
+    from repro.core.planner import clear_plan_cache
+    clear_plan_cache()
+    A, B, M = _operands(seed=21)
+    stream = [(_revalue(A, s), B, M) for s in range(4)]
+    with obs.tracing() as tr:
+        with QueryEngine(cache_results=True) as engine:
+            engine.serve(stream)
+            engine.serve([stream[0]])               # exact repeat -> hit
+    names = {r["name"] for r in tr.sink.spans()}
+    assert {"serve.submit", "serve.queue_wait", "serve.plan",
+            "serve.exec", "serve.result_cache_put",
+            "serve.cache_hit"} <= names
+    # per-request trace ids: every submit got its own
+    submits = [r for r in tr.sink.spans() if r["name"] == "serve.submit"]
+    assert len(submits) == 5
+    tids = [r["trace"] for r in submits]
+    assert len(set(tids)) == 5 and None not in tids
+    # the exec event links back to the bucket's member traces
+    execs = [r for r in tr.sink.spans() if r["name"] == "serve.exec"]
+    assert execs and set(execs[0]["attrs"]["traces"]) <= set(tids)
+
+
+def test_delta_lifecycle_spans():
+    from repro.core.formats import CSRDelta
+    A, B, M = _operands(seed=31)
+    with obs.tracing() as tr:
+        with QueryEngine(max_batch=8) as engine:
+            engine.serve([(A, B, M)])
+            delta = CSRDelta.upserts([0, 2], [3, 5], [1.5, 0.25])
+            engine.submit_delta(A, B, M, delta_a=delta)
+    names = {r["name"] for r in tr.sink.spans()}
+    assert {"delta.apply", "delta.revalidate",
+            "delta.invalidate"} <= names
+    recs = {r["name"]: r for r in tr.sink.spans()}
+    assert recs["delta.apply"]["attrs"]["applied"] == 1  # one operand delta
+    assert "survived" in recs["delta.revalidate"]["attrs"]
+
+
+def test_tracing_never_perturbs_deterministic_snapshot():
+    A, B, M = _operands(seed=41)
+    stream = [(_revalue(A, s), B, M) for s in range(6)]
+
+    def run(traced):
+        with QueryEngine(cache_results=False) as engine:
+            if traced:
+                with obs.tracing():
+                    engine.serve(stream)
+            else:
+                engine.serve(stream)
+            return engine.metrics.deterministic_snapshot()
+
+    assert run(traced=False) == run(traced=True)
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics: hit/miss latency split (the percentile-skew fix)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_latencies_tracked_separately():
+    from repro.serving.metrics import ServeMetrics
+    m = ServeMetrics()
+    m.record_bucket(size=3, algorithm="msa", route="row",
+                    queue_wait_s=0.0, plan_s=0.0, exec_s=0.3,
+                    latencies_s=(0.10, 0.20, 0.30))
+    for s in (0.001, 0.002):
+        m.record_cache_hit(latency_s=s)
+    snap = m.snapshot()
+    assert snap["miss_lat_count"] == 3 and snap["hit_lat_count"] == 2
+    assert snap["lat_count"] == 5                   # combined view
+    # hits no longer silently vanish: combined p50 sits below miss-only
+    assert snap["lat_p50_s"] < snap["miss_lat_p50_s"]
+    assert snap["hit_lat_p99_s"] < snap["miss_lat_p50_s"]
+    # legacy no-latency call still counts the hit, skews nothing
+    m.record_cache_hit()
+    snap2 = m.snapshot()
+    assert snap2["result_cache_hits"] == 3
+    assert snap2["hit_lat_count"] == 2
+
+
+def test_engine_records_hit_latency():
+    A, B, M = _operands(seed=51)
+    with QueryEngine() as engine:
+        engine.serve([(A, B, M)])
+        engine.serve([(A, B, M)])
+        snap = engine.metrics.snapshot()
+    assert snap["result_cache_hits"] == 1
+    assert snap["hit_lat_count"] == 1
+    assert snap["lat_count"] == snap["miss_lat_count"] + 1
+
+
+# ---------------------------------------------------------------------------
+# wiring
+# ---------------------------------------------------------------------------
+
+
+def test_obs_registered_in_benchmark_order():
+    from benchmarks.run import ORDER
+    assert "obs" in ORDER
+
+
+def test_bench_save_attaches_cache_info(tmp_path, monkeypatch):
+    from benchmarks.common import save
+    monkeypatch.setenv("REPRO_BENCH_OUT", str(tmp_path))
+    path = save("unit_grid", {"k": 1})
+    payload = json.load(open(path))
+    assert payload["k"] == 1
+    info = payload["_cache_info"]
+    assert "planner-plans" in info
+    assert {"size", "capacity", "hits", "misses"} <= set(
+        next(iter(info.values())))

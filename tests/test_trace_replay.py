@@ -257,3 +257,103 @@ def test_committed_default_serving_profile_loads():
 def test_replay_registered_in_benchmark_order():
     from benchmarks.run import ORDER
     assert "replay" in ORDER
+
+
+# ---------------------------------------------------------------------------
+# rotating sink: segment boundaries + seeded sampling (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def _line_len(event):
+    return len(json.dumps(event, sort_keys=True)) + 1
+
+
+def test_rotating_sink_rotation_boundaries(tmp_path):
+    from repro.serving.trace import RotatingTraceSink, load_rotated
+    tr = tiny_trace(queries=12)
+    # size the segment for ~3 events so the 12-event stream crosses
+    # several rotation boundaries with headroom on both sides
+    cap = max(_line_len(ev) for ev in tr.events) * 3 + 120
+    path = str(tmp_path / "rot.jsonl")
+    with RotatingTraceSink(path, max_bytes=cap, rotate=8,
+                           name="rot-test") as sink:
+        for ev in tr.events:
+            assert sink.write(ev)
+    segs = sink.segments()
+    assert len(segs) >= 3
+    # a segment may exceed max_bytes only when a single event does
+    for p in segs:
+        n_events = sum(1 for _ in open(p)) - 1      # minus header
+        assert os.path.getsize(p) <= cap or n_events == 1
+        # every segment is a standalone loadable trace
+        seg = Trace.load(p)
+        assert seg.name == "rot-test" and seg.n_requests == n_events >= 1
+    # concatenated load reproduces the full stream, in capture order
+    loaded = load_rotated(path, rotate=8)
+    assert [ev["t"] for ev in loaded.events] == [ev["t"]
+                                                 for ev in tr.events]
+    assert [ev["fp"] for ev in loaded.events] == [ev["fp"]
+                                                  for ev in tr.events]
+    assert sink.written == 12 and sink.sampled_out == 0
+
+
+def test_rotating_sink_drops_oldest_beyond_rotate(tmp_path):
+    from repro.serving.trace import RotatingTraceSink, load_rotated
+    tr = tiny_trace(seed=3, queries=12)
+    cap = max(_line_len(ev) for ev in tr.events) * 2 + 120
+    path = str(tmp_path / "rot.jsonl")
+    with RotatingTraceSink(path, max_bytes=cap, rotate=2) as sink:
+        for ev in tr.events:
+            sink.write(ev)
+    # at most rotate+1 files survive; the oldest events fell off the end
+    segs = sink.segments()
+    assert len(segs) == 3
+    loaded = load_rotated(path, rotate=2)
+    kept = [ev["t"] for ev in loaded.events]
+    assert 0 < len(kept) < 12
+    assert kept == [ev["t"] for ev in tr.events][-len(kept):]
+    assert sink.written == 12                       # counts ALL persists
+
+
+def test_rotating_sink_oversized_event_still_writes(tmp_path):
+    from repro.serving.trace import RotatingTraceSink
+    tr = tiny_trace(queries=2)
+    path = str(tmp_path / "big.jsonl")
+    with RotatingTraceSink(path, max_bytes=1, rotate=2) as sink:
+        assert sink.write(tr.events[0])             # larger than max_bytes
+    assert sink.written == 1
+    assert Trace.load(path).n_requests == 1         # not silently dropped
+
+
+def test_sampled_capture_deterministic_under_keep_events_false(tmp_path):
+    from repro.serving.trace import RotatingTraceSink
+    A = erdos_renyi(32, 3, seed=1)
+    B = erdos_renyi(32, 3, seed=2)
+    M = er_mask(32, 4, seed=3)
+
+    def capture(fname, seed):
+        sink = RotatingTraceSink(str(tmp_path / fname), max_bytes=1 << 20,
+                                 rotate=2, sample_rate=0.5, seed=seed)
+        rec = TraceRecorder(name="sampled", sink=sink, keep_events=False)
+        rec.register_operand(A, spec_er(32, 3, seed=1))
+        rec.register_operand(B, spec_er(32, 3, seed=2))
+        rec.register_operand(M, spec_er_mask(32, 4, seed=3))
+        for q in range(40):
+            rec.on_submit(A, B, M, t=q * 1e-3)
+        sink.close()
+        # O(1) memory: nothing accumulates on the recorder itself
+        assert rec.events == []
+        assert sink.written + sink.sampled_out == 40
+        assert 0 < sink.written < 40                # 0.5 really sampled
+        return sink
+
+    s1 = capture("a.jsonl", seed=7)
+    s2 = capture("b.jsonl", seed=7)
+    # same seed -> the SAME events survive, byte-identical capture
+    assert s1.written == s2.written
+    assert (open(tmp_path / "a.jsonl").read()
+            == open(tmp_path / "b.jsonl").read())
+    t1 = [ev["t"] for ev in Trace.load(str(tmp_path / "a.jsonl")).events]
+    s3 = capture("c.jsonl", seed=8)
+    t3 = [ev["t"] for ev in Trace.load(str(tmp_path / "c.jsonl")).events]
+    assert (s3.written, t3) != (s1.written, t1)     # seed matters

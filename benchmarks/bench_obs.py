@@ -236,7 +236,11 @@ def run(n: int = 512, queries: int = 48, iters: int = 3,
             loaded = json.load(f)
     export_ok = (len(loaded["traceEvents"]) == len(spans)
                  and len(events["traceEvents"]) == len(spans)
-                 and all(e["ph"] == "X" for e in events["traceEvents"]))
+                 # slices export as "X"; counter tracks (queue depth,
+                 # in-flight, hit-rate — PR 10) as Perfetto "C" events
+                 and all(e["ph"] in ("X", "C")
+                         for e in events["traceEvents"])
+                 and any(e["ph"] == "C" for e in events["traceEvents"]))
     table["export"] = {"events": len(events["traceEvents"])}
     print(f"[obs] export  {len(events['traceEvents'])} trace events "
           f"(round trip {'OK' if export_ok else 'FAIL'})", flush=True)

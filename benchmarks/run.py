@@ -16,8 +16,8 @@ import time
 import traceback
 
 ORDER = ("density", "planner", "tile", "dist", "serve", "incremental",
-         "replay", "obs", "triangle", "rmat", "scaling", "ktruss", "bc",
-         "block")
+         "replay", "obs", "health", "triangle", "rmat", "scaling",
+         "ktruss", "bc", "block")
 
 
 def main() -> None:
@@ -54,9 +54,10 @@ def main() -> None:
         only = set(ORDER)
 
     from . import (bench_bc, bench_block_kernel, bench_density, bench_dist,
-                   bench_incremental, bench_ktruss, bench_obs,
-                   bench_planner, bench_replay, bench_rmat_scale,
-                   bench_scaling, bench_serve, bench_tile, bench_triangle)
+                   bench_health, bench_incremental, bench_ktruss,
+                   bench_obs, bench_planner, bench_replay,
+                   bench_rmat_scale, bench_scaling, bench_serve,
+                   bench_tile, bench_triangle)
     if args.smoke:
         density_kw = dict(n=256, degrees=(2, 8), mask_degrees=(2, 8),
                           iters=3)
@@ -74,6 +75,11 @@ def main() -> None:
         # iters stays high even in smoke: the gate is a ratio of two
         # noisy ~ms passes; the median needs samples to converge
         obs_kw = dict(n=128, queries=16, iters=21, smoke=True)
+        # n stays at 256 in smoke: the monitor's per-record aggregation
+        # cost is fixed (~2us), so the pass must be long enough that 5%
+        # of it clears the measurement noise floor (at n=128 the bar
+        # equals the jitter and the gate coin-flips)
+        health_kw = dict(n=256, queries=24, iters=21, smoke=True)
     else:
         density_kw = dict(n=2048 if args.full else 1024)
         tile_kw = dict(n=512)
@@ -91,6 +97,10 @@ def main() -> None:
         # the gate is a ratio of two noisy ~40ms passes, so the median
         # needs samples to converge under scheduler jitter (~5s total)
         obs_kw = dict(n=1024, queries=128 if args.full else 96, iters=61)
+        # same scale story as obs_kw: the monitored-vs-plain ratio needs
+        # ~60ms passes and many pairs to resolve a ~1% true cost
+        health_kw = dict(n=1024, queries=96 if args.full else 48,
+                         iters=61 if args.full else 41)
     jobs = {
         "density": lambda: bench_density.run(**density_kw),
         "planner": lambda: bench_planner.run(**density_kw),
@@ -100,6 +110,7 @@ def main() -> None:
         "incremental": lambda: bench_incremental.run(**incremental_kw),
         "replay": lambda: bench_replay.run(**replay_kw),
         "obs": lambda: bench_obs.run(**obs_kw),
+        "health": lambda: bench_health.run(**health_kw),
         "triangle": lambda: bench_triangle.run(small=not args.full),
         "rmat": lambda: bench_rmat_scale.run(
             scales=(8, 9, 10, 11, 12) if args.full else (8, 9, 10)),

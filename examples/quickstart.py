@@ -322,6 +322,47 @@ def main():
             families = obs.parse_prometheus(resp.read().decode())
     print("scraped", len(families), "prometheus samples")
 
+    # --- 13. health intelligence: SLO burn rates + cost-model drift --------
+    #
+    # `repro.obs.health` turns that span stream into an online verdict.
+    # HealthMonitor is itself a sink: ring-sharded sliding windows (O(1)
+    # memory on the injectable clock), declarative SLOs evaluated as
+    # SRE-style multi-window burn rates ("failing" needs the error
+    # budget burning >= 2x on BOTH the 5s and 60s windows, so a single
+    # blip never pages), and a drift detector streaming each exec
+    # span's modeled-vs-measured residual per (tune family, algorithm,
+    # regime).
+    from repro.obs.health import HealthMonitor
+    monitor = HealthMonitor()            # DEFAULT_SLOS + drift detector
+    with obs.tracing(monitor):
+        with QueryEngine(monitor=monitor) as engine:
+            for s in range(4):
+                engine.submit(fresh_values(A_c, s), B_c, M_c)
+            engine.flush()
+            print("healthy verdict:", engine.health().status)
+
+            # induced pressure: hash + complement is NotImplemented, so
+            # this storm burns the serve-errors budget on both windows;
+            # with expose_port= the /health endpoint now answers 503
+            # carrying exactly these reasons
+            storm = [engine.submit(A_c, B_c, M_c, algorithm="hash",
+                                   complement=True) for _ in range(8)]
+            engine.flush()
+            for t in storm:
+                try:
+                    t.result()
+                except NotImplementedError:
+                    pass
+            verdict = engine.health()
+    print("under pressure:", verdict.status, "-", verdict.reasons[0])
+
+    # a drift flag names the exact refit (`python -m repro.tune --only
+    # <family>`) and resets itself when the cost table is retuned; the
+    # cross-PR perf trajectory over results/bench/*_grid.json renders
+    # via `python -m repro.obs.report` (--check gates flag regressions)
+    print("drift:",
+          monitor.drift.report().command or "cost model calibrated")
+
 
 if __name__ == "__main__":
     main()

@@ -41,6 +41,7 @@ miss for large non-complemented problems.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import zlib
 from typing import Dict, Optional, Sequence, Tuple
@@ -898,8 +899,11 @@ def explain(p) -> Dict:
 
 #: memo for per-bucket span attachment — explain() costs ~100us (feature
 #: recomputation), far above the ~5us span budget, and serving re-emits
-#: it on every bucket execution of the same immutable plan
-_explain_memo = caches.LRUCache("planner-explain", 256)
+#: it on every bucket execution of the same immutable plan.  Registered
+#: in the bounded ``repro.caches`` registry with an env-configurable cap
+#: so long-lived engines cycling many plans cannot grow it unboundedly.
+_explain_memo = caches.LRUCache("planner-explain", 256,
+                                env_var="REPRO_EXPLAIN_MEMO_CAP")
 
 
 def explain_cached(p) -> Dict:
@@ -914,6 +918,33 @@ def explain_cached(p) -> Dict:
     info = explain(p)
     _explain_memo.put(id(p), (p, info))
     return info
+
+
+def feature_regime(p) -> str:
+    """Coarse log-bucketed feature signature of a plan's operands — the
+    drift detector's per-regime key.
+
+    The paper's finding (and PR 4's fitted constants) is that the right
+    kernel swings with size, row widths and densities; a cost model can
+    be calibrated in one regime and stale in another.  Buckets are
+    log2 for sizes/widths and log10 for densities, coarse enough that
+    one serving workload lands in a handful of regimes (bounded drift
+    state) yet fine enough to separate the paper's density sweeps.
+    Works for row, tile and distributed plans — anything carrying
+    ``PlanStats``.
+    """
+    s = p.stats
+
+    def b2(x) -> int:
+        return int(math.log2(max(1, int(x))))
+
+    def b10(d: float) -> int:
+        return int(math.floor(math.log10(max(d, 1e-9))))
+
+    dens_a = s.nnz_a / max(1, s.m * s.k)
+    dens_m = s.nnz_m / max(1, s.m * s.n)
+    return (f"m{b2(s.m)}n{b2(s.n)}w{b2(s.pm)}"
+            f"da{b10(dens_a)}dm{b10(dens_m)}")
 
 
 def plan_batch(As: Sequence[CSR], B, Ms: Sequence[CSR], *,

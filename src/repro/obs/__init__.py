@@ -14,14 +14,32 @@ Span sites cost one global read + one branch while tracing is off, and
 spans never feed scheduling or deterministic counters — enabling them
 cannot change ``deterministic_snapshot()`` (pinned by
 ``benchmarks/bench_obs.py`` and the CI ``obs-smoke`` job).
+
+Online health intelligence (quickstart §13) rides the same stream::
+
+    monitor = obs.HealthMonitor()        # aggregator + SLOs + drift
+    eng = QueryEngine(monitor=monitor, expose_port=0)
+    with obs.tracing(monitor):
+        ... serve ...
+    eng.health()                         # HealthVerdict{ok|degraded|failing}
+
+while ``python -m repro.obs.report`` renders the cross-PR trajectory of
+every committed bench grid.
 """
-from . import export, sinks  # noqa: F401  (re-exported submodules)
+# NB: .report is deliberately NOT imported here — it is a CLI module
+# (``python -m repro.obs.report``) and pre-importing it from the package
+# __init__ would trip runpy's double-import warning
+from . import drift, export, health, sinks, slo  # noqa: F401
+from .drift import DriftDetector
 from .exposition import parse_prometheus, render_prometheus
 from .export import chrome_trace, residuals, save_chrome_trace
+from .health import HealthMonitor, HealthVerdict, WindowAggregator
 from .sinks import InMemorySink, JsonlSpanSink, load_spans
+from .slo import DEFAULT_SLOS, Objective, SLOEngine
 from .spans import (
     Tracer,
     configure,
+    counter,
     current_spans,
     disable,
     enabled,
@@ -33,9 +51,11 @@ from .spans import (
 )
 
 __all__ = [
-    "InMemorySink", "JsonlSpanSink", "Tracer", "chrome_trace",
-    "configure", "current_spans", "disable", "enabled", "event",
-    "export", "get_tracer", "load_spans", "new_trace",
+    "DEFAULT_SLOS", "DriftDetector", "HealthMonitor", "HealthVerdict",
+    "InMemorySink", "JsonlSpanSink", "Objective", "SLOEngine", "Tracer",
+    "WindowAggregator", "chrome_trace", "configure", "counter",
+    "current_spans", "disable", "drift", "enabled", "event", "export",
+    "get_tracer", "health", "load_spans", "new_trace",
     "parse_prometheus", "render_prometheus", "residuals",
-    "save_chrome_trace", "sinks", "span", "tracing",
+    "save_chrome_trace", "sinks", "slo", "span", "tracing",
 ]

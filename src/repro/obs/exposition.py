@@ -10,13 +10,22 @@ Prometheus-compatible scraper ingests (version 0.0.4):
   requirement);
 * the active tracer's in-memory span ring — per-phase duration
   histograms (``repro_span_duration_seconds{phase="serve.exec"}``) with
-  cumulative buckets, ``_sum`` and ``_count``.
+  cumulative buckets, ``_sum`` and ``_count`` (counter-track records
+  are skipped: they have no duration);
+* the engine's :class:`repro.obs.health.HealthMonitor`, when attached —
+  ``repro_slo_*`` burn-rate gauges per objective and window,
+  ``repro_drift_*`` residual gauges per (family, kernel, regime), and
+  the scalar ``repro_health_status`` (0=ok 1=degraded 2=failing) the
+  fabric scrapes per worker.
 
 ``parse_prometheus`` is the matching reader used by tests and the CI
-``obs-smoke`` job to assert the exposition round-trips.
+``obs-smoke`` job to assert the exposition round-trips.  The round
+trip is lossless, including non-finite values (``+Inf`` buckets, NaN
+quantiles from empty reservoirs) and escaped label values.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Tuple
 
 __all__ = ["parse_prometheus", "render_prometheus", "HISTOGRAM_BUCKETS"]
@@ -32,12 +41,39 @@ def _fmt(v) -> str:
         return "1" if v else "0"
     if isinstance(v, int):
         return str(v)
-    return repr(float(v))
+    f = float(v)
+    if math.isnan(f):
+        return "NaN"                  # Prometheus spelling, not repr's "nan"
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
 
 
 def _escape(v: str) -> str:
     return str(v).replace("\\", "\\\\").replace('"', '\\"') \
                  .replace("\n", "\\n")
+
+
+def _unescape(v: str) -> str:
+    """Inverse of :func:`_escape` (``\\\\``, ``\\"``, ``\\n``); unknown
+    escapes pass through verbatim, matching Prometheus readers."""
+    out: List[str] = []
+    i = 0
+    while i < len(v):
+        ch = v[i]
+        if ch == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            if nxt == "n":
+                out.append("\n")
+                i += 2
+                continue
+            if nxt in ('"', "\\"):
+                out.append(nxt)
+                i += 2
+                continue
+        out.append(ch)
+        i += 1
+    return "".join(out)
 
 
 class _Writer:
@@ -102,6 +138,8 @@ def _span_section(w: _Writer, tracer) -> None:
         return
     per_phase: Dict[str, List[float]] = {}
     for rec in spans_fn():
+        if "counter" in rec:       # counter tracks have no duration
+            continue
         per_phase.setdefault(rec.get("name", "?"), []).append(
             max(rec.get("dur", 0.0), 0.0))
     name = "repro_span_duration_seconds"
@@ -119,6 +157,54 @@ def _span_section(w: _Writer, tracer) -> None:
                  kind="histogram")
 
 
+_STATUS_CODE = {"ok": 0.0, "degraded": 1.0, "failing": 2.0}
+
+
+def _slo_section(w: _Writer, engine) -> None:
+    mon = getattr(engine, "monitor", None)
+    if mon is None:
+        return
+    for st in mon.slo_status():
+        labels = {"slo": st.objective.name}
+        w.sample("repro_slo_burn_rate", st.burn_short,
+                 {**labels, "window": "short"},
+                 help_text="Error-budget burn rate per objective/window")
+        w.sample("repro_slo_burn_rate", st.burn_long,
+                 {**labels, "window": "long"})
+        w.sample("repro_slo_events", st.events_long, labels,
+                 help_text="Relevant events in the long window")
+        w.sample("repro_slo_healthy", st.status == "ok", labels,
+                 help_text="1 while the objective is within budget")
+    verdict = mon.verdict(engine)
+    w.sample("repro_health_status", _STATUS_CODE[verdict.status],
+             help_text="HealthVerdict: 0=ok 1=degraded 2=failing")
+
+
+def _drift_section(w: _Writer, engine) -> None:
+    mon = getattr(engine, "monitor", None)
+    if mon is None or mon.drift is None:
+        return
+    flagged = {(f.family, f.algorithm, f.regime)
+               for f in mon.drift.flags()}
+    for st in mon.drift.snapshot().values():
+        labels = {"family": st["family"], "algorithm": st["algorithm"],
+                  "regime": st["regime"]}
+        w.sample("repro_drift_ewma_residual", st["ewma_residual"], labels,
+                 help_text="Recent-weighted measured/modeled cost ratio "
+                           "(1.0 = calibrated)")
+        w.sample("repro_drift_mean_residual", st["mean_residual"], labels,
+                 help_text="Geometric-mean measured/modeled cost ratio")
+        w.sample("repro_drift_observations", st["count"], labels,
+                 help_text="Residuals folded for this kernel/regime")
+        key = (st["family"], st["algorithm"], st["regime"])
+        w.sample("repro_drift_flagged", key in flagged, labels,
+                 help_text="1 when this kernel/regime is outside the "
+                           "drift band")
+    rep = mon.drift.report()
+    w.sample("repro_drift_flagged_families", len(rep.families),
+             help_text="Probe families needing a repro.tune re-run")
+
+
 def render_prometheus(engine=None, tracer=None) -> str:
     """Render the full exposition.  ``engine=None`` skips the serve
     section; ``tracer=None`` uses the globally-configured tracer (and
@@ -132,6 +218,9 @@ def render_prometheus(engine=None, tracer=None) -> str:
         tracer = _spans.get_tracer()
     if tracer is not None:
         _span_section(w, tracer)
+    if engine is not None:
+        _slo_section(w, engine)
+        _drift_section(w, engine)
     return w.render()
 
 
@@ -156,9 +245,10 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple], float]:
             items = []
             for pair in _split_labels(body):
                 k, _, v = pair.partition("=")
-                if not (v.startswith('"') and v.endswith('"')):
+                if len(v) < 2 or not (v.startswith('"')
+                                      and v.endswith('"')):
                     raise ValueError(f"malformed label in: {raw!r}")
-                items.append((k, v[1:-1]))
+                items.append((k, _unescape(v[1:-1])))
             labels = tuple(sorted(items))
         if not name.replace("_", "").replace(":", "").isalnum():
             raise ValueError(f"malformed metric name in: {raw!r}")
@@ -167,17 +257,32 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple], float]:
 
 
 def _split_labels(body: str) -> List[str]:
-    """Split ``k="v",k2="v2"`` on commas outside quotes."""
-    parts, cur, in_q, prev = [], [], False, ""
+    """Split ``k="v",k2="v2"`` on commas outside quotes.
+
+    Tracks escape state explicitly: a ``prev != "\\\\"`` heuristic
+    mis-handles values *ending* in a backslash (rendered ``\\\\`` —
+    the second backslash is escaped, so the closing quote that follows
+    must still close the string)."""
+    parts: List[str] = []
+    cur: List[str] = []
+    in_q = esc = False
     for ch in body:
-        if ch == '"' and prev != "\\":
-            in_q = not in_q
-        if ch == "," and not in_q:
+        if in_q:
+            cur.append(ch)
+            if esc:
+                esc = False
+            elif ch == "\\":
+                esc = True
+            elif ch == '"':
+                in_q = False
+            continue
+        if ch == ",":
             parts.append("".join(cur))
             cur = []
-        else:
-            cur.append(ch)
-        prev = ch
+            continue
+        if ch == '"':
+            in_q = True
+        cur.append(ch)
     if cur:
         parts.append("".join(cur))
     return parts

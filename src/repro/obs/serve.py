@@ -5,8 +5,11 @@ bound to loopback by default, serving
 
 * ``GET /metrics`` — the Prometheus text exposition
   (:func:`repro.obs.exposition.render_prometheus`);
-* ``GET /health``  — JSON engine liveness: queue depth, quiesce/stop
-  state, async mode.
+* ``GET /health``  — the engine's :class:`repro.obs.health.HealthVerdict`
+  as JSON (plus queue depth, quiesce/stop state, async mode); answers
+  **503** with machine-readable ``reasons[]`` while the verdict is
+  ``failing``, which is what load balancers and the multi-process
+  fabric key ejection on.
 
 Start it with ``QueryEngine(expose_port=0)`` (0 = ephemeral port, read
 ``engine.obs_server.port``), or standalone against a demo engine via
@@ -21,10 +24,19 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 __all__ = ["ObsServer", "start_server"]
 
 
-def _health(engine) -> dict:
+def _health(engine) -> tuple:
+    """``(http_status, payload)``: the engine's HealthVerdict plus the
+    liveness fields earlier PRs exposed.  503 while ``failing`` — the
+    contract load balancers/fabric schedulers eject workers on."""
+    if hasattr(engine, "health"):
+        verdict = engine.health()
+    else:
+        from .health import basic_verdict
+        verdict = basic_verdict(engine)
     stopped = bool(getattr(engine, "_stop", False))
     payload = {
-        "status": "stopped" if stopped else "ok",
+        "status": verdict.status,
+        "reasons": list(verdict.reasons),
         "queue_depth": int(engine._pending()),
         "async_mode": bool(getattr(engine, "async_mode", False)),
         "stopped": stopped,
@@ -32,7 +44,7 @@ def _health(engine) -> dict:
     snap = engine.metrics.snapshot()
     payload["completed"] = snap["completed"]
     payload["failed"] = snap["failed"]
-    return payload
+    return (503 if verdict.status == "failing" else 200), payload
 
 
 def _make_handler(engine):
@@ -58,8 +70,9 @@ def _make_handler(engine):
                 self._send(200, body,
                            "text/plain; version=0.0.4; charset=utf-8")
             elif path == "/health":
-                body = (json.dumps(_health(engine)) + "\n").encode("utf-8")
-                self._send(200, body, "application/json")
+                code, payload = _health(engine)
+                body = (json.dumps(payload) + "\n").encode("utf-8")
+                self._send(code, body, "application/json")
             else:
                 self._send(404, b"not found\n", "text/plain")
 

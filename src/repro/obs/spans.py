@@ -31,8 +31,8 @@ from contextvars import ContextVar
 from typing import Dict, Iterator, List, Optional
 
 __all__ = [
-    "Tracer", "configure", "current_spans", "disable", "enabled",
-    "event", "get_tracer", "new_trace", "span", "tracing",
+    "Tracer", "configure", "counter", "current_spans", "disable",
+    "enabled", "event", "get_tracer", "new_trace", "span", "tracing",
 ]
 
 #: parent span id of the calling context (thread/task local): nested
@@ -158,6 +158,20 @@ class Tracer:
             rec["attrs"] = attrs
         self._emit(rec)
 
+    def counter(self, name: str, value: float,
+                *, trace: Optional[int] = None) -> None:
+        """Emit a counter-track sample (queue depth, in-flight
+        requests, cache hit-rate): a durationless record whose
+        ``counter`` key carries the instantaneous value.  Exports as a
+        Perfetto counter ("ph": "C") track; the health aggregator folds
+        it as a windowed gauge."""
+        rec = {"name": name, "counter": float(value),
+               "span": self._next_span(),
+               "trace": trace if trace is not None else _trace_var.get(),
+               "t0": time.perf_counter(),  # lint: clock-ok(counter stamp)
+               "tid": threading.get_ident()}
+        self._emit(rec)
+
     def _emit(self, rec: Dict) -> None:
         self.sink.emit(rec)
 
@@ -225,6 +239,16 @@ def event(name: str, *, dur_s: float = 0.0, trace: Optional[int] = None,
     if t is None:
         return
     t.event(name, dur_s=dur_s, trace=trace, **attrs)
+
+
+def counter(name: str, value: float,
+            *, trace: Optional[int] = None) -> None:
+    """Module-level counter-track site: one global read + one branch
+    when tracing is off, like :func:`span`/:func:`event`."""
+    t = _tracer
+    if t is None:
+        return
+    t.counter(name, value, trace=trace)
 
 
 def new_trace() -> Optional[int]:

@@ -132,7 +132,8 @@ class QueryEngine:
                  result_cache: Optional[ResultCache] = None,
                  cache_results: bool = True, use_burst: bool = True,
                  clock=None, recorder=None,
-                 expose_port: Optional[int] = None):
+                 expose_port: Optional[int] = None,
+                 monitor=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if queue_cap < max_batch:
@@ -158,6 +159,12 @@ class QueryEngine:
         #: trace recorder (``serving.trace.TraceRecorder``) — observes every
         #: submit; None = no capture
         self.recorder = recorder
+        #: health intelligence (``repro.obs.health.HealthMonitor``) —
+        #: ``engine.health()`` consults it and the exposition layer
+        #: renders its repro_slo_*/repro_drift_* families.  The monitor
+        #: only SEES spans when it is (or tees behind) the active
+        #: tracing sink: ``with obs.tracing(monitor): ...``
+        self.monitor = monitor
         self.metrics = ServeMetrics()
         self._owns_results = result_cache is None
         self.results = (result_cache if result_cache is not None
@@ -197,10 +204,13 @@ class QueryEngine:
             self.obs_server.close()
             self.obs_server = None
         self.flush()
+        # sync-mode engines have no worker to stop, but a closed engine
+        # must still read as stopped (basic_verdict / the "stopped"
+        # field in /health key off this flag)
+        with self._space:
+            self._stop = True
+            self._space.notify_all()
         if self._worker is not None:
-            with self._space:
-                self._stop = True
-                self._space.notify_all()
             self._worker.join(timeout=5.0)
             self._worker = None
         self.clock.detach(self._space)
@@ -212,6 +222,18 @@ class QueryEngine:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    def health(self):
+        """This engine's :class:`repro.obs.health.HealthVerdict`.
+
+        With a :class:`~repro.obs.health.HealthMonitor` attached the
+        verdict folds liveness, every SLO's multi-window burn rate and
+        cost-model drift; without one it is liveness-only.  ``/health``
+        serves exactly this (503 while ``failing``)."""
+        from repro.obs.health import basic_verdict
+        if self.monitor is not None:
+            return self.monitor.verdict(engine=self)
+        return basic_verdict(self)
 
     # -- submission ---------------------------------------------------------
 
@@ -267,6 +289,8 @@ class QueryEngine:
                     self.metrics.record_cache_hit(latency_s=hit_s)
                     obs.event("serve.cache_hit", dur_s=hit_s,
                               trace=trace_id)
+                    obs.counter("serve.cache_hit_rate",
+                                self.metrics.hit_rate())
                     ticket._complete(post(hit) if post is not None else hit)
                     return ticket
         req = Request(A=A, B=B, M=M, semiring=semiring,
@@ -275,6 +299,10 @@ class QueryEngine:
                       key=bkey, submitted_at=submitted_at,
                       trace_id=trace_id)
         self._admit(req)
+        if trace_id is not None:
+            # counter track: queue depth after admission (tracing-gated —
+            # _pending() takes the space lock, so untraced submits skip it)
+            obs.counter("serve.queue_depth", self._pending())
         return ticket
 
     def submit_triangle(self, adj: CSR, *, relabel: bool = True,
@@ -641,6 +669,13 @@ class QueryEngine:
 
     def _fail_bucket(self, reqs: List[Request], err: BaseException) -> None:
         self.metrics.record_failure(len(reqs))
+        if obs.enabled():
+            # one serve.error per request: the error-rate SLO burns
+            # per-request budget, not per-bucket
+            for r in reqs:
+                obs.event("serve.error", trace=r.trace_id,
+                          error=type(err).__name__)
+            obs.counter("serve.inflight", 0)
         for r in reqs:
             r.ticket._fail(err)
 
@@ -655,6 +690,10 @@ class QueryEngine:
         # scheduling decision)
         t_in = self.clock.now()
         queue_wait = t_in - min(r.submitted_at for r in reqs)
+        if obs.enabled():
+            # counter track: requests entering execution (drops to 0 in
+            # the post-exec block) — Perfetto renders it as load context
+            obs.counter("serve.inflight", len(reqs))
         t_exec = time.perf_counter()  # lint: clock-ok(exec duration)
         with self._exec_lock:
             try:
@@ -672,15 +711,20 @@ class QueryEngine:
             # queue wait is a CLOCK duration (deterministic under replay):
             # emitted with the engine-computed value, never re-measured
             obs.event("serve.queue_wait", dur_s=queue_wait, traces=traces)
-            modeled = None
+            modeled = regime = None
             if plan is not None:
                 by_name = dict(plan.costs)
                 if algo in by_name:
                     modeled = float(by_name[algo])
+                # regime keys the drift detector's per-(kernel, feature
+                # bucket) residual statistics
+                regime = planner.feature_regime(plan)
             obs.event("serve.exec", dur_s=exec_s, route=route,
                       algorithm=algo, size=len(reqs),
                       merged_from=merged_from, modeled_ms=modeled,
-                      traces=traces)
+                      regime=regime, traces=traces)
+            obs.counter("serve.inflight", 0)
+            obs.counter("serve.cache_hit_rate", self.metrics.hit_rate())
         self.metrics.record_bucket(
             size=len(reqs), algorithm=algo, route=route,
             queue_wait_s=queue_wait, plan_s=plan_s, exec_s=exec_s,
@@ -718,6 +762,8 @@ class QueryEngine:
                 value = res if r.post is None else r.post(res)
             except Exception as e:
                 self.metrics.record_failure(1)
+                obs.event("serve.error", trace=r.trace_id,
+                          error=type(e).__name__)
                 r.ticket._fail(e)
                 continue
             r.ticket._complete(value)

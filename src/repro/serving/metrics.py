@@ -179,6 +179,21 @@ class ServeMetrics:
                 "mean_bucket_exec_s": (self.exec_s / done) if done else 0.0,
             }
 
+    def hit_rate(self) -> float:
+        """Lifetime result-cache hit rate over submissions — the value
+        the ``serve.cache_hit_rate`` counter track carries (windowed
+        rates live in ``repro.obs.health``)."""
+        with self._lock:
+            if not self.submitted:
+                return 0.0
+            return self.result_cache_hits / self.submitted
+
+    def error_rate(self) -> float:
+        """Lifetime failed fraction of finished requests."""
+        with self._lock:
+            total = self.completed + self.failed
+            return (self.failed / total) if total else 0.0
+
     def bucket_log(self):
         with self._lock:
             return list(self._bucket_log)

@@ -432,3 +432,124 @@ def test_bench_save_attaches_cache_info(tmp_path, monkeypatch):
     assert "planner-plans" in info
     assert {"size", "capacity", "hits", "misses"} <= set(
         next(iter(info.values())))
+
+
+# ---------------------------------------------------------------------------
+# counter tracks (PR 10): Perfetto "C" events alongside the slices
+# ---------------------------------------------------------------------------
+
+
+def test_counter_tracks_export_as_chrome_counters():
+    with obs.tracing() as tr:
+        obs.counter("serve.queue_depth", 3)
+        with obs.span("serve.exec"):
+            obs.counter("serve.inflight", 2.5)
+        spans = tr.sink.spans()
+    evs = obs.chrome_trace(spans)["traceEvents"]
+    counters = [e for e in evs if e["ph"] == "C"]
+    slices = [e for e in evs if e["ph"] == "X"]
+    assert len(counters) == 2 and len(slices) == 1
+    by_name = {e["name"]: e for e in counters}
+    assert by_name["serve.queue_depth"]["args"] == {"value": 3.0}
+    assert by_name["serve.inflight"]["args"] == {"value": 2.5}
+    # counter records carry no duration and sit on the emitting thread's
+    # row like any slice
+    assert all("dur" not in e and e["pid"] == 1 for e in counters)
+    assert all(e["cat"] == "serve" for e in counters)
+
+
+def test_counter_disabled_is_a_noop():
+    assert not obs.enabled()
+    obs.counter("serve.queue_depth", 9)     # must not raise or record
+    with obs.tracing() as tr:
+        pass
+    assert tr.sink.spans() == []
+
+
+def test_counter_records_skipped_by_span_histograms():
+    with obs.tracing() as tr:
+        obs.counter("serve.queue_depth", 4)
+        obs.event("serve.exec", dur_s=0.01)
+        text = render_prometheus(tracer=tr)
+    samples = parse_prometheus(text)
+    # the exec span histogram exists; no histogram family for the counter
+    assert ("repro_span_duration_seconds_count",
+            (("phase", "serve.exec"),)) in samples
+    assert not any("queue_depth" in name for name, _ in samples)
+
+
+# ---------------------------------------------------------------------------
+# exposition parser edge cases (PR 10): the round trip is lossless
+# ---------------------------------------------------------------------------
+
+
+def test_parse_prometheus_nonfinite_values():
+    import math
+    text = ('b_bucket{le="+Inf"} 7\n'
+            'q{quantile="0.99"} NaN\n'
+            'lo -Inf\n'
+            'hi +Inf\n')
+    s = parse_prometheus(text)
+    assert s[("b_bucket", (("le", "+Inf"),))] == 7.0
+    assert math.isnan(s[("q", (("quantile", "0.99"),))])
+    assert s[("lo", ())] == float("-inf")
+    assert s[("hi", ())] == float("inf")
+
+
+def test_parse_prometheus_unescapes_label_values():
+    text = ('m{v="a\\nb\\"c\\\\d"} 1\n'
+            'm{v="x,y"} 2\n'          # comma inside quotes
+            'm{v="tail\\\\"} 3\n')    # value ENDING in a backslash
+    s = parse_prometheus(text)
+    assert s[("m", (("v", 'a\nb"c\\d'),))] == 1.0
+    assert s[("m", (("v", "x,y"),))] == 2.0
+    assert s[("m", (("v", "tail\\"),))] == 3.0
+
+
+def test_render_parse_round_trip_is_lossless():
+    import math
+    from repro.obs.exposition import _Writer
+    w = _Writer()
+    w.sample("rt_nan", float("nan"))
+    w.sample("rt_inf", float("inf"))
+    w.sample("rt_esc", 1.5, {"path": 'a\\b"c\nd', "tail": "z\\"})
+    s = parse_prometheus(w.render())
+    assert math.isnan(s[("rt_nan", ())])
+    assert s[("rt_inf", ())] == float("inf")
+    assert s[("rt_esc", (("path", 'a\\b"c\nd'), ("tail", "z\\")))] == 1.5
+
+
+# ---------------------------------------------------------------------------
+# residual extraction robustness (PR 10): sparse/empty captures
+# ---------------------------------------------------------------------------
+
+
+def test_residuals_tolerate_empty_and_planless_captures():
+    from repro.obs.export import residual_summary, residuals
+    assert residuals([]) == []
+    assert residuals(None) == []
+    assert residual_summary([]) == {}
+    assert residual_summary(None) == {}
+    # spans exist but none carries a modeled cost (plan spans absent)
+    planless = [{"name": "serve.exec", "dur": 0.01},
+                {"name": "serve.queue_wait", "dur": 0.0},
+                {"name": "serve.exec", "counter": 1.0}]
+    assert residuals(planless) == []
+    assert residual_summary(planless) == {}
+
+
+def test_residual_record_filters_and_normalizes():
+    from repro.obs.export import residual_record
+    rec = {"name": "serve.exec", "dur": 4e-3,
+           "attrs": {"modeled_ms": 2.0, "size": 2, "algorithm": "msa",
+                     "route": "batched", "regime": "r"}}
+    r = residual_record(rec)
+    assert r["residual"] == pytest.approx(1.0)      # 4ms / (2ms * 2)
+    assert r["size"] == 2 and r["algorithm"] == "msa"
+    assert residual_record({"name": "other", "dur": 1.0}) is None
+    assert residual_record({"name": "serve.exec", "counter": 2.0}) is None
+    bad = {"name": "serve.exec", "dur": 1.0,
+           "attrs": {"modeled_ms": "garbage"}}
+    assert residual_record(bad) is None
+    zero = {"name": "serve.exec", "dur": 1.0, "attrs": {"modeled_ms": 0.0}}
+    assert residual_record(zero) is None
